@@ -1,0 +1,49 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+# allocation math at f64 (matches the scipy-validated test precision)
+jax.config.update("jax_enable_x64", True)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+KEY = jax.random.PRNGKey(2019)
+TRIALS = 4000  # paper uses 1e4; 4e3 keeps the full suite CPU-friendly
+
+
+def save(name: str, record: dict):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def table(rows: list[dict], cols: list[str], *, fmt: str = "10.4g") -> str:
+    head = " | ".join(f"{c:>12s}" for c in cols)
+    sep = "-" * len(head)
+    lines = [head, sep]
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            cells.append(
+                f"{v:>12{fmt[2:]}}" if isinstance(v, float) else f"{str(v):>12s}"
+            )
+        lines.append(" | ".join(cells))
+    return "\n".join(lines)

@@ -1,0 +1,46 @@
+"""Fig. 2 — N x T* as a function of q*mu (T* = Theta(1/N)).
+
+Paper setting: N = (1000, 2000, 3000), mu = (2, 1, 0.5), alpha = 1.
+The product N*T* should be (nearly) invariant in N for every q, showing
+T* = Theta(1/N); the curve over q shows the straggling-rate dependence.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save, table
+from repro.core.allocation import t_star
+from repro.core.runtime_model import ClusterSpec
+
+
+def run(verbose: bool = True) -> dict:
+    base = ClusterSpec.make([1000, 2000, 3000], [2.0, 1.0, 0.5], 1.0)
+    qs = np.logspace(-2, 2, 17)
+    rows = []
+    for q in qs:
+        c = base.scale_mu(float(q))
+        n_w, mu, al = c.arrays()
+        t = float(t_star(n_w, mu, al))
+        rows.append({"q": float(q), "N*T*": c.total_workers * t})
+    # invariance check at q=1 across N scales
+    scales = []
+    for s in (1, 2, 4):
+        c = ClusterSpec.make([1000 * s, 2000 * s, 3000 * s], [2.0, 1.0, 0.5], 1.0)
+        n_w, mu, al = c.arrays()
+        scales.append(c.total_workers * float(t_star(n_w, mu, al)))
+    record = {
+        "rows": rows,
+        "N_invariance": scales,
+        "theta_1_over_N": bool(np.allclose(scales, scales[0], rtol=1e-9)),
+    }
+    if verbose:
+        print("Fig 2: N*T* vs q (scale of mu); T* = Theta(1/N)")
+        print(table(rows, ["q", "N*T*"]))
+        print(f"N*T* across N-scales x1/x2/x4: {scales} "
+              f"(invariant: {record['theta_1_over_N']})")
+    save("fig2", record)
+    return record
+
+
+if __name__ == "__main__":
+    run()

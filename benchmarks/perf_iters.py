@@ -1,0 +1,98 @@
+"""§Perf hillclimb driver: run named optimization iterations per cell.
+
+    PYTHONPATH=src python -m benchmarks.perf_iters [--only grok_train]
+
+Each iteration re-lowers + re-analyses one (arch x shape) cell on the
+single-pod mesh with one change applied, and saves the record to
+artifacts/perf/<cell>__<iter>.json. EXPERIMENTS.md §Perf narrates the
+hypothesis -> change -> before -> after chain from these artifacts.
+NOTE: must run in a fresh process (dryrun import sets the 512-device
+flag); this module imports repro.launch.dryrun first for that reason.
+"""
+from repro.launch import dryrun  # noqa: F401  (sets XLA_FLAGS first)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import os  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.configs.base import SHAPES_BY_NAME  # noqa: E402
+from repro.launch.dryrun import roofline_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "perf")
+
+# cell -> list of (iteration-name, config-transform, cell-kwargs)
+ITERS = {
+    # H1 follow-ups (expert sharding fix itself is rules.py commit;
+    # baseline/after recorded already). Memory-dominated now.
+    "grok_train": (
+        "grok-1-314b", "train_4k",
+        [
+            ("i2_no_remat",
+             lambda c: dataclasses.replace(c, remat=False), {}),
+            ("i3_bf16_logits",
+             lambda c: dataclasses.replace(c, logits_dtype="bfloat16"), {}),
+            ("i4_no_remat_bf16_logits_skip",
+             lambda c: dataclasses.replace(
+                 c, remat=False, logits_dtype="bfloat16",
+                 causal_block_skip=True), {}),
+        ],
+    ),
+    # H2: tiny model, TP collectives dominate -> replicate params.
+    "whisper_prefill": (
+        "whisper-tiny", "prefill_32k",
+        [
+            ("i1_pure_dp", lambda c: c, {"param_strategy": "replicated"}),
+            ("i2_pure_dp_bf16_logits",
+             lambda c: dataclasses.replace(c, logits_dtype="bfloat16"),
+             {"param_strategy": "replicated"}),
+            ("i3_dp_seq", lambda c: c, {"param_strategy": "dp_seq"}),
+            ("i4_dp_seq_bf16_logits",
+             lambda c: dataclasses.replace(c, logits_dtype="bfloat16"),
+             {"param_strategy": "dp_seq"}),
+            ("i5_dp_seq_causal_skip",
+             lambda c: dataclasses.replace(
+                 c, logits_dtype="bfloat16", causal_block_skip=True),
+             {"param_strategy": "dp_seq"}),
+        ],
+    ),
+    # H3: decode is cache-byte bound -> in-place cache + bf16 logits.
+    "granite_decode": (
+        "granite-3-2b", "decode_32k",
+        [
+            ("i1_donate_cache", lambda c: c, {"donate_cache": True}),
+            ("i2_donate_bf16_logits",
+             lambda c: dataclasses.replace(c, logits_dtype="bfloat16"),
+             {"donate_cache": True}),
+            ("i3_int8_kv",
+             lambda c: dataclasses.replace(c, kv_quant=True), {}),
+            ("i4_int8_kv_bf16_logits",
+             lambda c: dataclasses.replace(
+                 c, kv_quant=True, logits_dtype="bfloat16"), {}),
+        ],
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    cells = {args.only: ITERS[args.only]} if args.only else ITERS
+    for cell, (arch, shape_name, iters) in cells.items():
+        cfg0 = get_arch(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        for name, transform, kwargs in iters:
+            rec = roofline_cell(transform(cfg0), shape, multi_pod=False,
+                                verbose=True, **kwargs)
+            rec["iteration"] = name
+            path = os.path.join(OUT, f"{cell}__{name}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()

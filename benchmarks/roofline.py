@@ -1,0 +1,68 @@
+"""Roofline report: read artifacts/dryrun/*.json -> §Roofline table.
+
+Terms (seconds, per the prompt's definitions, v5e constants):
+  compute    = HLO_FLOPs / (chips x 197e12)
+  memory     = HLO_bytes / (chips x 819e9)
+  collective = collective_bytes / (chips x 50e9)
+HLO quantities from cost_analysis are PER-DEVICE in the partitioned
+module, so dividing the per-device value by the per-chip peak gives the
+same number — that is what dryrun.py stored in t_compute/t_memory/
+t_collective.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTDIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str | None = "single_pod_16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTDIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("scan_layers"):  # compile-proof records undercount layers
+            continue
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(r)
+    return recs
+
+
+def as_markdown(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| roofline frac | useful FLOPs |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} "
+            f"| {r['t_memory']:.3e} | {r['t_collective']:.3e} "
+            f"| {r['bottleneck'].replace('t_', '')} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True) -> dict:
+    recs = load_records()
+    if not recs:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first")
+        return {"rows": []}
+    if verbose:
+        print("Roofline (single-pod 16x16, per-device terms in seconds):")
+        print(as_markdown(recs))
+        worst = min(recs, key=lambda r: r["roofline_fraction"])
+        coll = max(recs, key=lambda r: r["t_collective"] /
+                   max(r["t_compute"] + r["t_memory"], 1e-30))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']}")
+    return {"rows": recs}
+
+
+if __name__ == "__main__":
+    run()

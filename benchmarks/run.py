@@ -1,0 +1,32 @@
+"""Run every paper-figure benchmark + the roofline report.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig4,fig9]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import fig2, fig3, fig4, fig5, fig6, fig7, fig8, fig9, roofline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig4,fig9")
+    args = ap.parse_args()
+    mods = {
+        "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
+        "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
+        "roofline": roofline,
+    }
+    names = args.only.split(",") if args.only else list(mods)
+    for name in names:
+        print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
+        t0 = time.time()
+        mods[name].run()
+        print(f"[{name} done in {time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the xlstm-125m assigned architecture at full width but trimmed
+depth/context so a few hundred steps run on CPU in minutes, with the
+whole production substrate engaged: synthetic data pipeline, AdamW +
+cosine schedule + clipping, async checkpointing, telemetry, and the
+heterogeneity-aware batch split from the paper's Theorem 2.
+
+The synthetic stream has conditional entropy ~= ln(17) ~= 2.83 nats, so
+a successful run drives loss from ~ln(50304) ~= 10.8 toward 2.83.
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.core.runtime_model import ClusterSpec
+from repro.data import SyntheticLMData
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import (
+    TrainConfig,
+    Trainer,
+    heterogeneous_batch_split,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)  # xLSTM time-scan
+    # is sequential — short contexts keep the CPU demo snappy; on TPU
+    # use the full train_4k shape via repro.launch.train
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # full-width xlstm-125m, trimmed depth for CPU wall-clock
+    config = dataclasses.replace(
+        get_arch("xlstm-125m"), num_layers=4, compute_dtype="float32"
+    )
+    model = Model(config)
+    print(f"model: {config.name} ({model.param_count() / 1e6:.1f}M params)")
+
+    # the paper's allocation applied to the data-parallel batch split
+    fleet = ClusterSpec.make([2, 2], [4.0, 1.0])
+    split = heterogeneous_batch_split(fleet, args.batch)
+    print(f"heterogeneous fleet {[(g.num_workers, g.mu) for g in fleet.groups]}"
+          f" -> per-group batch shares {split.tolist()} (Theorem 2)")
+
+    shape = ShapeConfig("train_lm", args.seq_len, args.batch, "train")
+    data = SyntheticLMData(config, shape, seed=0)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    cfg = TrainConfig(
+        steps=args.steps,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=100,
+        log_every=20,
+    )
+    trainer = Trainer(model, data, opt, cfg)
+    _, _, history = trainer.run()
+    losses = [h["loss"] for h in history]
+    print("loss trajectory:", np.round(losses, 3).tolist())
+    assert losses[-1] < losses[0] - 1.0, "loss must drop substantially"
+    print(f"final loss {losses[-1]:.3f} (entropy floor ~2.83)")
+
+
+if __name__ == "__main__":
+    main()

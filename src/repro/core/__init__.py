@@ -1,0 +1,38 @@
+"""Core: the paper's contribution — optimal load allocation for coded
+distributed computation in heterogeneous clusters (Kim, Park, Choi 2019).
+"""
+from repro.core.allocation import (
+    AllocationPlan,
+    optimal_allocation,
+    optimal_r,
+    reisizadeh_allocation,
+    t_star,
+    uncoded,
+    uniform_given_n,
+    uniform_given_r,
+    xi_star,
+)
+from repro.core.lambertw import lambertw0, lambertwm1
+from repro.core.planner import DeploymentPlan, plan_deployment, replan_on_membership_change
+from repro.core.runtime_model import ClusterSpec, GroupSpec, expected_order_stat, xi
+
+__all__ = [
+    "AllocationPlan",
+    "ClusterSpec",
+    "DeploymentPlan",
+    "GroupSpec",
+    "expected_order_stat",
+    "lambertw0",
+    "lambertwm1",
+    "optimal_allocation",
+    "optimal_r",
+    "plan_deployment",
+    "reisizadeh_allocation",
+    "replan_on_membership_change",
+    "t_star",
+    "uncoded",
+    "uniform_given_n",
+    "uniform_given_r",
+    "xi",
+    "xi_star",
+]

@@ -1,0 +1,243 @@
+"""Load-allocation algorithms (the paper's core contribution, Section III).
+
+Implemented schemes
+-------------------
+* ``optimal_allocation``        — Theorem 2 (model (1)); with
+  ``per_row=True`` this is Corollary 2 (Section III-E, the model of [32]).
+* ``t_star``                    — minimum expected latency, eq. (18)/(33).
+* ``uniform_given_n``           — Section III-D-1: ``l = n/N``.
+* ``uniform_given_r``           — Section III-D-2 / Theorem 4 (= [33]):
+  ``l = k/r`` with the per-group split ``r_j`` solved from eq. (28)+(26).
+* ``reisizadeh_allocation``     — Appendix D (the scheme of [32]).
+
+All functions are pure jnp (jittable, differentiable where meaningful)
+and operate on per-group arrays ``(N, mu, alpha)``; ``ClusterSpec`` from
+``runtime_model`` is the user-facing wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lambertw import lambertwm1_neg_exp
+from repro.core.runtime_model import ClusterSpec, xi
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationPlan:
+    """Result of a load-allocation computation.
+
+    Attributes:
+      loads: per-group real-valued loads ``l_(j)`` (rows of coded A per
+        worker in group j).
+      loads_int: integerized loads ``ceil(l_(j))`` used for deployment.
+      r: per-group expected completion counts ``r_j`` (real).
+      n: total coded rows ``n = sum_j N_j l_(j)`` (real).
+      n_int: integer total coded rows from ``loads_int``.
+      k: number of uncoded rows.
+      t_star: the scheme's expected-latency value (lower bound for the
+        optimal scheme; analytic expectation otherwise; NaN if unknown).
+      scheme: name tag.
+    """
+
+    loads: np.ndarray
+    loads_int: np.ndarray
+    r: np.ndarray
+    n: float
+    n_int: int
+    k: int
+    t_star: float
+    scheme: str
+
+    @property
+    def rate(self) -> float:
+        """MDS code rate k/n."""
+        return self.k / self.n
+
+
+def _w_term(mu, alpha):
+    """W_{-1}(-exp(-(alpha*mu + 1))) — appears throughout Theorem 2.
+
+    Evaluated in log space so large alpha*mu (near-deterministic workers)
+    stays finite instead of underflowing to NaN.
+    """
+    return lambertwm1_neg_exp(alpha * mu + 1.0)
+
+
+def optimal_r(n_workers, mu, alpha):
+    """r*_j = N_j (1 + 1 / W_{-1}(-e^{-(alpha mu + 1)}))  (eq. (15)).
+
+    Identical under both probabilistic models (the W-term does not see
+    the load scaling).
+    """
+    return n_workers * (1.0 + 1.0 / _w_term(mu, alpha))
+
+
+def xi_star(mu, alpha):
+    """xi(r*_j, N_j, mu_j) = alpha + log(-W_{-1}(.))/mu  (eq. (17))."""
+    return alpha + jnp.log(-_w_term(mu, alpha)) / mu
+
+
+def t_star(n_workers, mu, alpha, k: int | None = None, *, per_row: bool = False):
+    """Minimum expected latency T* (eq. (18)); T*_b (eq. (33)) if per_row."""
+    denom = jnp.sum(-mu * n_workers / _w_term(mu, alpha))
+    t = 1.0 / denom
+    if per_row:
+        assert k is not None, "per-row model latency scales with k"
+        t = t * k
+    return t
+
+
+def optimal_allocation(
+    cluster: ClusterSpec, k: int, *, per_row: bool = False
+) -> AllocationPlan:
+    """Theorem 2 (or Corollary 2 with per_row=True).
+
+    Returns the optimal per-group loads l*_(j), the optimal (n*, k) MDS
+    code, and the lower-bound latency T*.
+    """
+    n_w, mu, al = cluster.arrays()
+    r = optimal_r(n_w, mu, al)
+    xs = xi_star(mu, al)
+    # l*_j = k / (r_j + sum_{j'!=j} r_j' xi_j / xi_j')   (eq. (16))
+    # = k / (xi_j * sum_{j'} r_j' / xi_j')
+    s = jnp.sum(r / xs)
+    loads = k / (xs * s)
+    n = jnp.sum(n_w * loads)
+    t = t_star(n_w, mu, al, k, per_row=per_row)
+    loads_np = np.asarray(loads)
+    loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
+    return AllocationPlan(
+        loads=loads_np,
+        loads_int=loads_int,
+        r=np.asarray(r),
+        n=float(n),
+        n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
+        k=k,
+        t_star=float(t),
+        scheme="optimal_per_row" if per_row else "optimal",
+    )
+
+
+def uniform_given_n(cluster: ClusterSpec, k: int, n: float) -> AllocationPlan:
+    """Section III-D-1: every worker gets l = n/N rows of the (n,k) code.
+
+    The master needs ceil(kN/n) finished workers (eq. (26)). t_star is
+    left NaN — the heterogeneous-mixture order statistic has no simple
+    closed form; use the Monte Carlo simulator.
+    """
+    n_w, mu, al = cluster.arrays()
+    big_n = cluster.total_workers
+    l = n / big_n
+    loads = np.full((cluster.num_groups,), l)
+    # Completion split is not fixed a priori for uniform-n; record the
+    # total requirement r = kN/n spread proportionally (informational).
+    r_total = k * big_n / n
+    r = np.asarray(n_w) / big_n * r_total
+    loads_int = np.ceil(loads - 1e-9).astype(np.int64)
+    return AllocationPlan(
+        loads=loads,
+        loads_int=loads_int,
+        r=r,
+        n=float(n),
+        n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
+        k=k,
+        t_star=float("nan"),
+        scheme="uniform_n",
+    )
+
+
+def group_code_split(cluster: ClusterSpec, r: int) -> np.ndarray:
+    """Solve eq. (28)+(26) for the per-group split (r_1..r_G), sum = r.
+
+    From eq. (28) the equalized tail gives r_j = N_j (1 - exp(-mu_j c))
+    for a common c > 0; eq. (26) fixes c by sum_j r_j = r. The left side
+    is strictly increasing in c with range (0, N), so bisection always
+    converges for 0 < r < N. (The paper notes eq. (29) written per-group
+    may have no simultaneous integer solution for G > 2; the equalized-c
+    form is the continuous relaxation that Corollary 1 optimizes.)
+    """
+    n_w, mu, _ = cluster.arrays()
+    n_w = np.asarray(n_w)
+    mu = np.asarray(mu)
+    assert 0 < r < cluster.total_workers, "need r in (0, N)"
+
+    def total(c):
+        return float(np.sum(n_w * (1.0 - np.exp(-mu * c))))
+
+    lo, hi = 0.0, 1.0
+    while total(hi) < r:
+        hi *= 2.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if total(mid) < r:
+            lo = mid
+        else:
+            hi = mid
+    c = 0.5 * (lo + hi)
+    return n_w * (1.0 - np.exp(-mu * c))
+
+
+def uniform_given_r(cluster: ClusterSpec, k: int, r: int) -> AllocationPlan:
+    """Section III-D-2 / Theorem 4 — the group-code scheme of [33].
+
+    Every worker stores l = k/r rows; group j uses an (N_j, r_j) MDS code
+    with the split from eq. (28)+(26). As N -> inf the expected latency
+    converges to 1/r (the paper's explanation of the scheme's latency
+    floor). t_star records that floor.
+    """
+    n_w, mu, al = cluster.arrays()
+    l = k / r
+    loads = np.full((cluster.num_groups,), l)
+    r_split = group_code_split(cluster, r)
+    loads_int = np.ceil(loads - 1e-9).astype(np.int64)
+    n = float(l * cluster.total_workers)
+    return AllocationPlan(
+        loads=loads,
+        loads_int=loads_int,
+        r=r_split,
+        n=n,
+        n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
+        k=k,
+        t_star=1.0 / r,
+        scheme="uniform_r_group_code",
+    )
+
+
+def reisizadeh_allocation(cluster: ClusterSpec, k: int) -> AllocationPlan:
+    """Appendix D — the heterogeneous allocation of [32].
+
+    l~_j = k / (s * delta_j) with
+    delta_j = -(W_{-1}(-e^{-(alpha mu + 1)}) + 1)/mu and
+    s = sum_j N_j mu_j / (1 + mu_j delta_j). Defined for the per-row
+    model (30); the paper shows it coincides with Corollary 2's optimum.
+    """
+    n_w, mu, al = cluster.arrays()
+    w = _w_term(mu, al)
+    delta = -(w + 1.0) / mu
+    s = jnp.sum(n_w * mu / (1.0 + mu * delta))
+    loads = k / (s * delta)
+    n = jnp.sum(n_w * loads)
+    loads_np = np.asarray(loads)
+    loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
+    # Expected completion counts at the equalized deadline = r*_j.
+    r = np.asarray(optimal_r(n_w, mu, al))
+    return AllocationPlan(
+        loads=loads_np,
+        loads_int=loads_int,
+        r=r,
+        n=float(n),
+        n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
+        k=k,
+        t_star=float("nan"),
+        scheme="reisizadeh",
+    )
+
+
+def uncoded(cluster: ClusterSpec, k: int) -> AllocationPlan:
+    """Uncoded baseline: n = k, uniform split, wait for every worker."""
+    plan = uniform_given_n(cluster, k, float(k))
+    return dataclasses.replace(plan, scheme="uncoded")

@@ -1,0 +1,134 @@
+"""Distributed coded matvec: the paper's master/worker pattern on a mesh.
+
+TPU adaptation (see DESIGN.md §3): SPMD collectives cannot early-exit on
+"first k rows", so the runtime path is deadline-based — every worker
+computes its block, an erasure mask marks which workers met the deadline
+(injected by tests; produced by the telemetry layer in deployment), and
+the master decodes A·x from the surviving coded rows.
+
+Layout: the coded matrix ``A~`` is laid out worker-major with per-worker
+blocks PADDED to ``max_load`` rows so the array shards evenly over the
+``workers`` mesh axis: shape (W, max_load, d). shard_map gives each
+device its block; the local product is one matvec (the Pallas kernel in
+``repro/kernels/coded_matvec`` is the TPU-tiled version, selectable with
+``use_kernel=True``); results are all-gathered and decoded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.coding import decode_from_rows, encode, make_generator
+from repro.core.planner import DeploymentPlan
+
+
+def pack_coded_matrix(generator, a, plan: DeploymentPlan):
+    """Encode A and pack per-worker blocks padded to max_load.
+
+    Returns:
+      packed: (W, max_load, d) float32 — worker i's rows in [i, :load_i].
+      row_of: (W, max_load) int32 — index into coded rows for each packed
+        slot (used to select generator rows at decode time); -1 = pad.
+    """
+    coded = np.asarray(encode(generator, a))
+    w = plan.num_workers
+    ml = plan.max_load
+    d = coded.shape[1]
+    packed = np.zeros((w, ml, d), dtype=np.float32)
+    row_of = np.full((w, ml), -1, dtype=np.int32)
+    for i, (s, e) in enumerate(plan.row_ranges):
+        packed[i, : e - s] = coded[s:e]
+        row_of[i, : e - s] = np.arange(s, e, dtype=np.int32)
+    return packed, row_of
+
+
+def _local_matvec(a_block, x):
+    # a_block: (1, max_load, d) on this shard; x replicated (d,)
+    return jnp.einsum("wld,d->wl", a_block, x)
+
+
+def coded_matvec(
+    mesh: Mesh,
+    packed,
+    x,
+    *,
+    axis: str = "workers",
+    use_kernel: bool = False,
+):
+    """All-workers coded product: (W, max_load) of A~_i x, sharded on axis.
+
+    This is the hot path (the paper's per-worker subtask). Decode is
+    separate (`decode_coded_result`) because the erasure mask is only
+    known at the deadline.
+    """
+    if use_kernel:
+        from repro.kernels.coded_matvec import ops as cmv_ops
+
+        local = lambda a_block, xv: cmv_ops.blocked_matvec_batch(a_block, xv)
+    else:
+        local = _local_matvec
+
+    fn = jax.jit(
+        jax.shard_map(
+            lambda a_block, xv: local(a_block, xv),
+            mesh=mesh,
+            in_specs=(P(axis, None, None), P()),
+            out_specs=P(axis, None),
+            # pallas_call outputs carry no varying-mesh-axes metadata
+            check_vma=False,
+        )
+    )
+    return fn(packed, x)
+
+
+def decode_coded_result(
+    generator, row_of, partials, finished_workers, k: int
+):
+    """Master-side decode from the workers that met the deadline.
+
+    Args:
+      generator: (n, k) MDS generator used at pack time.
+      row_of: (W, max_load) packed-slot -> coded-row map (-1 pads).
+      partials: (W, max_load) per-slot inner products.
+      finished_workers: (W,) bool mask.
+      k: uncoded rows.
+
+    Returns (z, ok): least-squares recovery of A x.
+    """
+    row_of = np.asarray(row_of)
+    partials = np.asarray(partials)
+    fin = np.asarray(finished_workers)
+    slot_ok = (row_of >= 0) & fin[:, None]
+    rows = row_of[slot_ok]
+    vals = partials[slot_ok]
+    if rows.size < k:
+        return np.zeros((k,), dtype=partials.dtype), False
+    g_rows = np.asarray(generator)[rows]
+    z = np.asarray(decode_from_rows(jnp.asarray(g_rows), jnp.asarray(vals)))
+    return z, True
+
+
+def end_to_end_coded_matvec(
+    mesh: Mesh,
+    a,
+    x,
+    plan: DeploymentPlan,
+    finished_workers=None,
+    *,
+    key=None,
+    use_kernel: bool = False,
+):
+    """Convenience wrapper: encode -> distribute -> compute -> decode."""
+    k = a.shape[0]
+    assert k == plan.k
+    gen = make_generator(plan.n, k, key=key)
+    packed, row_of = pack_coded_matrix(gen, a, plan)
+    partials = coded_matvec(mesh, jnp.asarray(packed), jnp.asarray(x),
+                            use_kernel=use_kernel)
+    if finished_workers is None:
+        finished_workers = np.ones((plan.num_workers,), dtype=bool)
+    return decode_coded_result(gen, row_of, partials, finished_workers, k)

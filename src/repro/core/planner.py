@@ -1,0 +1,122 @@
+"""Cluster planner: ClusterSpec -> deployable coded-computation plan.
+
+Bridges the paper's real-valued optimum (Theorem 2) and an executable
+assignment: integer per-worker row counts, generator size, worker->rows
+map, and re-planning hooks for elasticity (the closed-form solution makes
+re-planning O(G) — this is what makes the scheme practical at fleet
+scale: no iterative optimizer in the failure path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import allocation
+from repro.core.runtime_model import ClusterSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentPlan:
+    """Integerized, executable plan for one coded matvec deployment."""
+
+    cluster: ClusterSpec
+    k: int
+    loads_per_worker: np.ndarray  # (N,) int rows of coded A per worker
+    group_of_worker: np.ndarray  # (N,) int group index per worker
+    row_ranges: tuple  # worker -> (start, stop) into coded rows
+    n: int  # total coded rows actually deployed
+    t_star: float  # paper lower bound for the underlying real plan
+    scheme: str
+
+    @property
+    def num_workers(self) -> int:
+        return int(self.loads_per_worker.shape[0])
+
+    @property
+    def rate(self) -> float:
+        return self.k / self.n
+
+    @property
+    def max_load(self) -> int:
+        return int(self.loads_per_worker.max())
+
+
+def _expand(cluster: ClusterSpec, per_group: Sequence[int]):
+    loads, gid = [], []
+    for j, g in enumerate(cluster.groups):
+        loads += [int(per_group[j])] * g.num_workers
+        gid += [j] * g.num_workers
+    return np.asarray(loads, dtype=np.int64), np.asarray(gid, dtype=np.int64)
+
+
+def plan_deployment(
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    scheme: str = "optimal",
+    per_row: bool = False,
+    n: float | None = None,
+    r: int | None = None,
+) -> DeploymentPlan:
+    """Compute an integerized deployment plan for the requested scheme."""
+    if scheme == "optimal":
+        plan = allocation.optimal_allocation(cluster, k, per_row=per_row)
+    elif scheme == "uniform_n":
+        assert n is not None
+        plan = allocation.uniform_given_n(cluster, k, n)
+    elif scheme == "uniform_r":
+        assert r is not None
+        plan = allocation.uniform_given_r(cluster, k, r)
+    elif scheme == "reisizadeh":
+        plan = allocation.reisizadeh_allocation(cluster, k)
+    elif scheme == "uncoded":
+        plan = allocation.uncoded(cluster, k)
+    else:
+        raise ValueError(f"unknown scheme {scheme}")
+    loads_w, gid = _expand(cluster, plan.loads_int)
+    starts = np.concatenate([[0], np.cumsum(loads_w)[:-1]])
+    ranges = tuple(
+        (int(s), int(s + l)) for s, l in zip(starts, loads_w)
+    )
+    return DeploymentPlan(
+        cluster=cluster,
+        k=k,
+        loads_per_worker=loads_w,
+        group_of_worker=gid,
+        row_ranges=ranges,
+        n=int(loads_w.sum()),
+        t_star=plan.t_star,
+        scheme=plan.scheme,
+    )
+
+
+def replan_on_membership_change(
+    plan: DeploymentPlan, new_cluster: ClusterSpec
+) -> DeploymentPlan:
+    """Elastic re-planning: closed-form Theorem 2 on the new membership.
+
+    Called by the fault-tolerance layer when workers join/leave or when
+    online mu estimates are refreshed. O(G) cost.
+    """
+    scheme = "optimal" if plan.scheme.startswith("optimal") else plan.scheme
+    per_row = plan.scheme == "optimal_per_row"
+    return plan_deployment(new_cluster, plan.k, scheme=scheme, per_row=per_row)
+
+
+def estimate_mu_online(samples_per_group: Sequence[np.ndarray], k: int, loads):
+    """MLE of (mu_j, alpha_j) from observed per-worker round-trip times.
+
+    Shifted exponential MLE: alpha_hat = min(t) * k / l;
+    mu_hat = 1 / (mean(t - min(t)) * k / l). Feeds the planner's
+    re-planning loop (straggler-parameter drift tracking).
+    """
+    mus, alphas = [], []
+    for t, l in zip(samples_per_group, loads):
+        t = np.asarray(t, dtype=np.float64) * (k / float(l))
+        t0 = float(t.min())
+        alphas.append(t0)
+        excess = float(t.mean() - t0)
+        mus.append(1.0 / max(excess, 1e-12))
+    return np.asarray(mus), np.asarray(alphas)

@@ -1,0 +1,163 @@
+"""Runtime-distribution model of the paper (Section II-B).
+
+Two probabilistic models appear in the paper:
+
+* **Model (1)** (the paper's main model): a group-*j* worker assigned
+  ``l_j`` coded rows has round-trip time
+
+      T = alpha_j * l_j / k + (l_j / (k * mu_j)) * Exp(1)
+
+  i.e. CDF ``1 - exp(-(k mu_j / l_j)(t - alpha_j l_j / k))``. Time is
+  normalized by the problem size ``k`` (computing all ``k`` rows on one
+  unit-speed worker takes ``alpha + 1/mu`` on average).
+
+* **Model (30)** (Section III-E, the model of [32]): per-row scaling,
+
+      T_b = alpha_j * l_j + (l_j / mu_j) * Exp(1).
+
+Both are shifted exponentials that scale linearly in the load; all
+formulas below take a ``per_row`` flag selecting model (30).
+
+Key closed forms (paper eq. (6) and Appendix A): the expected r-th order
+statistic of N i.i.d. such times is
+
+    lambda_{r:N}^{l} = (l/k) (alpha + (H_N - H_{N-r}) / mu)      [model 1]
+    lambda_{r:N}^{l} =  l    (alpha + (H_N - H_{N-r}) / mu)      [model 30]
+
+with harmonic numbers H. The paper's analysis uses the approximation
+``H_N - H_{N-r} ~ log(N / (N - r))``; both exact and approximate forms
+are provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One heterogeneous worker group."""
+
+    num_workers: int  # N_j
+    mu: float  # straggling (rate) parameter mu_(j)
+    alpha: float = 1.0  # shift parameter alpha_(j)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A heterogeneous cluster = a list of groups (paper Section II-A)."""
+
+    groups: tuple[GroupSpec, ...]
+
+    @classmethod
+    def make(
+        cls,
+        num_workers: Sequence[int],
+        mus: Sequence[float],
+        alphas: Sequence[float] | float = 1.0,
+    ) -> "ClusterSpec":
+        if not hasattr(alphas, "__len__"):
+            alphas = [float(alphas)] * len(num_workers)
+        assert len(num_workers) == len(mus) == len(alphas)
+        return cls(
+            tuple(
+                GroupSpec(int(n), float(m), float(a))
+                for n, m, a in zip(num_workers, mus, alphas)
+            )
+        )
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def total_workers(self) -> int:
+        return sum(g.num_workers for g in self.groups)
+
+    def arrays(self):
+        """(N_j, mu_j, alpha_j) as float arrays (f64 when x64 is enabled)."""
+        dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        n = jnp.asarray([g.num_workers for g in self.groups], dtype=dt)
+        mu = jnp.asarray([g.mu for g in self.groups], dtype=dt)
+        al = jnp.asarray([g.alpha for g in self.groups], dtype=dt)
+        return n, mu, al
+
+    def scale_mu(self, q: float) -> "ClusterSpec":
+        """Scale every group's straggling parameter by q (paper's Fig 2/5)."""
+        return ClusterSpec(
+            tuple(
+                GroupSpec(g.num_workers, g.mu * q, g.alpha) for g in self.groups
+            )
+        )
+
+
+def harmonic(n):
+    """H_n for real n >= 0 via digamma (exact for integer n)."""
+    n = jnp.asarray(n, dtype=jnp.float64)
+    return jax.scipy.special.digamma(n + 1.0) + jnp.euler_gamma
+
+
+def xi(r, n_workers, mu, alpha):
+    """xi(r_j, N_j, mu_j) = alpha + log(N/(N-r))/mu  (paper eq. (9))."""
+    return alpha + jnp.log(n_workers / (n_workers - r)) / mu
+
+
+def expected_order_stat(
+    load,
+    r,
+    n_workers,
+    mu,
+    alpha,
+    k,
+    *,
+    per_row: bool = False,
+    exact_harmonic: bool = False,
+):
+    """lambda^{l}_{r:N} — expected r-th order statistic (paper eq. (6)).
+
+    With ``exact_harmonic`` uses H_N - H_{N-r}; otherwise the paper's
+    log(N/(N-r)) approximation.
+    """
+    if exact_harmonic:
+        tail = (harmonic(n_workers) - harmonic(n_workers - r)) / mu
+    else:
+        tail = jnp.log(n_workers / (n_workers - r)) / mu
+    scale = load if per_row else load / k
+    return scale * (alpha + tail)
+
+
+def sample_worker_times(
+    key,
+    loads_per_worker,
+    mus_per_worker,
+    alphas_per_worker,
+    k,
+    num_trials: int,
+    *,
+    per_row: bool = False,
+    dtype=jnp.float32,
+):
+    """Sample (num_trials, N) round-trip times under model (1) or (30).
+
+    ``loads_per_worker`` etc. are length-N arrays (already expanded from
+    groups). Returns times with shape (num_trials, N).
+    """
+    l = jnp.asarray(loads_per_worker, dtype=dtype)
+    mu = jnp.asarray(mus_per_worker, dtype=dtype)
+    al = jnp.asarray(alphas_per_worker, dtype=dtype)
+    e = jax.random.exponential(key, (num_trials, l.shape[0]), dtype=dtype)
+    if per_row:
+        return al * l + (l / mu) * e
+    return al * l / k + (l / (k * mu)) * e
+
+
+def expand_groups(cluster: ClusterSpec, per_group_values: Sequence[float]):
+    """Repeat per-group values to per-worker arrays (length N)."""
+    out = []
+    for g, v in zip(cluster.groups, per_group_values):
+        out.append(np.full((g.num_workers,), float(v)))
+    return jnp.asarray(np.concatenate(out))

@@ -1,0 +1,117 @@
+"""Deterministic synthetic LM data pipeline.
+
+Tokens are a counter-mode hash of (step, batch row, position) — fully
+deterministic, seekable (restore = set the step counter), and cheap. A
+Markov-ish structure (next token depends on a rolling mix of previous
+ids) gives the loss a learnable signal so the end-to-end training example
+can show loss actually decreasing rather than memorizing noise.
+
+The pipeline is checkpointable: ``state()`` returns {"step": int}, and
+``SyntheticLMData(..., start_step=...)`` resumes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _hash2d(step: int, b: int, s: int, seed: int) -> np.ndarray:
+    """uint32 counter hash (splitmix-style), vectorized over (b, s)."""
+    bi = np.arange(b, dtype=np.uint64)[:, None]
+    si = np.arange(s, dtype=np.uint64)[None, :]
+    with np.errstate(over="ignore"):  # uint64 wraparound is the hash
+        x = (np.uint64(step) * np.uint64(0x9E3779B97F4A7C15)
+             + bi * np.uint64(0xBF58476D1CE4E5B9)
+             + si * np.uint64(0x94D049BB133111EB)
+             + np.uint64(seed))
+        x ^= x >> np.uint64(30)
+        x *= np.uint64(0xBF58476D1CE4E5B9)
+        x ^= x >> np.uint64(27)
+        x *= np.uint64(0x94D049BB133111EB)
+        x ^= x >> np.uint64(31)
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    """Iterator of {"tokens": (B, S) i32, "labels": (B, S) i32} batches."""
+
+    config: ModelConfig
+    shape: ShapeConfig
+    seed: int = 0
+    start_step: int = 0
+    learnable: bool = True
+
+    def __post_init__(self):
+        self._step = self.start_step
+
+    def state(self) -> dict:
+        return {"step": self._step, "seed": self.seed}
+
+    def _raw(self, step: int) -> np.ndarray:
+        b, s = self.shape.global_batch, self.shape.seq_len
+        h = _hash2d(step, b, s + 1, self.seed)
+        v = self.config.vocab_size
+        if not self.learnable:
+            return (h % np.uint32(v)).astype(np.int32)
+        # Markov structure: token_t mixes a small random step with
+        # token_{t-1}, so the conditional entropy is well below log V.
+        base = (h % np.uint32(17)).astype(np.int64)
+        toks = np.cumsum(base, axis=1) % v
+        return toks.astype(np.int32)
+
+    def next_batch(self) -> dict:
+        seq = self._raw(self._step)  # (B, S+1)
+        self._step += 1
+        batch = {
+            "tokens": jnp.asarray(seq[:, :-1]),
+            "labels": jnp.asarray(seq[:, 1:]),
+        }
+        extras = make_extras(self.config, self.shape.global_batch)
+        if extras:
+            batch["extras"] = extras
+        return batch
+
+
+def make_extras(config: ModelConfig, batch: int):
+    """Modality-frontend STUBS: precomputed embeddings per the assignment."""
+    if config.family == "vlm":
+        return {
+            "image_embeds": jnp.zeros(
+                (batch, config.num_image_tokens, config.d_model), config.cdtype
+            )
+        }
+    if config.family == "audio":
+        return {
+            "frames": jnp.zeros(
+                (batch, config.encoder_seq, config.d_model), config.cdtype
+            )
+        }
+    return None
+
+
+def make_batch_specs(config: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for one training batch (dry-run input)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if config.family == "vlm":
+        batch["extras"] = {
+            "image_embeds": jax.ShapeDtypeStruct(
+                (b, config.num_image_tokens, config.d_model), config.cdtype
+            )
+        }
+    if config.family == "audio":
+        batch["extras"] = {
+            "frames": jax.ShapeDtypeStruct(
+                (b, config.encoder_seq, config.d_model), config.cdtype
+            )
+        }
+    return batch

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+The paper's per-worker subtask is the matvec ``A~_i x`` and the one-time
+encode is the matmul ``A~ = G A``; both get explicit-BlockSpec TPU
+kernels (``coded_matvec``, ``mds_encode``). The allocation math itself
+(the paper's contribution) is pure JAX — no kernel is warranted there.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.coded_matvec.ops import blocked_matvec, blocked_matvec_batch
+from repro.kernels.coded_matvec.ref import matvec_ref
+
+__all__ = ["blocked_matvec", "blocked_matvec_batch", "matvec_ref"]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: per-worker coded subtask ``y = A~_i x``.
+
+TPU adaptation of the paper's worker computation (a plain matvec on the
+paper's CPU workers). Tiling targets the v5e memory hierarchy:
+
+* grid = (R/BR, D/BD); each step loads an A tile (BR, BD) HBM->VMEM and a
+  matching x slice (BD,), accumulates a (BR,) partial in f32.
+* BR = 256 rows (8x128-lane aligned: reductions over BD run on the VPU's
+  8x128 vregs; a matvec has no MXU-shaped contraction unless batched).
+* BD = 1024 (bf16: 256*1024*2 = 512 KiB per A tile, well under the
+  ~16 MiB VMEM budget, leaving room for double buffering).
+* Accumulation across the D-grid dimension uses the standard
+  revisiting-output pattern: zero the accumulator when j == 0, add every
+  step. The output BlockSpec maps all j to the same (BR,) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BR = 256  # rows per tile (VPU 8x128-aligned)
+BD = 1024  # d-columns per tile
+
+
+def _kernel(a_ref, x_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)  # (BR, BD)
+    x = x_ref[...].astype(jnp.float32)  # (BD,)
+    acc_ref[...] += jax.lax.dot_general(
+        a, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bd", "interpret"))
+def matvec_kernel(a, x, *, br: int = BR, bd: int = BD, interpret: bool = True):
+    """y = A x. Shapes must be multiples of (br, bd) — ops.py pads."""
+    r, d = a.shape
+    assert r % br == 0 and d % bd == 0, (a.shape, br, bd)
+    grid = (r // br, d // bd)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), a.dtype),
+        scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

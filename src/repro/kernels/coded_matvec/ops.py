@@ -1,0 +1,38 @@
+"""Jit'd wrappers for the coded-matvec kernel (padding + batching)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coded_matvec.kernel import BD, BR, matvec_kernel
+
+
+def _pad_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bd", "interpret"))
+def blocked_matvec(a, x, *, br: int = BR, bd: int = BD, interpret: bool = True):
+    """y = A x for arbitrary (R, D): pads to tile multiples, slices back."""
+    r, d = a.shape
+    br = min(br, _pad_to(r, 8))
+    bd = min(bd, _pad_to(d, 128))
+    rp, dp = _pad_to(r, br), _pad_to(d, bd)
+    if (rp, dp) != (r, d):
+        a = jnp.pad(a, ((0, rp - r), (0, dp - d)))
+        x = jnp.pad(x, (0, dp - d))
+    y = matvec_kernel(a, x, br=br, bd=bd, interpret=interpret)
+    return y[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bd", "interpret"))
+def blocked_matvec_batch(a, x, *, br: int = BR, bd: int = BD, interpret: bool = True):
+    """a: (W, L, D), x: (D,) -> (W, L): vmap over the worker dim.
+
+    (On TPU the W dim becomes an extra grid dimension; in interpret mode
+    vmap runs the kernel body per worker.)
+    """
+    fn = lambda aw: blocked_matvec(aw, x, br=br, bd=bd, interpret=interpret)
+    return jax.vmap(fn)(a)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the coded-matvec kernel."""
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x):
+    """y = A x with f32 accumulation. a: (R, D); x: (D,)."""
+    return jnp.dot(
+        a.astype(jnp.float32), x.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+def matvec_batch_ref(a, x):
+    """a: (W, L, D); x: (D,) -> (W, L)."""
+    return jnp.einsum(
+        "wld,d->wl", a.astype(jnp.float32), x.astype(jnp.float32)
+    ).astype(a.dtype)

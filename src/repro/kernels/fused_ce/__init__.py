@@ -1,0 +1,4 @@
+from repro.kernels.fused_ce.ops import fused_linear_ce
+from repro.kernels.fused_ce.ref import linear_ce_ref
+
+__all__ = ["fused_linear_ce", "linear_ce_ref"]

@@ -1,0 +1,4 @@
+from repro.kernels.mds_encode.ops import mds_encode
+from repro.kernels.mds_encode.ref import encode_ref
+
+__all__ = ["encode_ref", "mds_encode"]

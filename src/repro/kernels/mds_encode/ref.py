@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the MDS-encode kernel."""
+import jax.numpy as jnp
+
+
+def encode_ref(g, a):
+    """A~ = G A with f32 accumulation. g: (n, k); a: (k, d)."""
+    return jnp.dot(
+        g.astype(jnp.float32), a.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)

@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3-0.6b ...``
+
+Runs a real training loop on the local devices (the production meshes
+are exercised by dryrun.py; this driver is sized for the end-to-end
+example: a ~100M-param model for a few hundred steps on CPU, or a real
+slice on accelerators). Supports checkpoint/restart (--resume picks up
+the latest step) and heterogeneity-aware batch splitting.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.core.runtime_model import ClusterSpec
+from repro.data import SyntheticLMData
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import (
+    TrainConfig,
+    Trainer,
+    heterogeneous_batch_split,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-sized smoke variant of the arch")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --checkpoint-dir")
+    ap.add_argument("--telemetry", default=None)
+    ap.add_argument("--hetero-groups", default=None,
+                    help="e.g. '4:2.0,4:0.5' = N:mu pairs; prints the "
+                         "paper-optimal per-group batch split")
+    args = ap.parse_args()
+
+    config = get_arch(args.arch)
+    if args.reduced:
+        config = config.reduced()
+    model = Model(config)
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    data = SyntheticLMData(config, shape)
+
+    if args.hetero_groups:
+        pairs = [p.split(":") for p in args.hetero_groups.split(",")]
+        cluster = ClusterSpec.make(
+            [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
+        )
+        split = heterogeneous_batch_split(cluster, args.batch)
+        print(f"heterogeneity-aware batch split (Theorem 2): {split.tolist()} "
+              f"over groups {[(g.num_workers, g.mu) for g in cluster.groups]}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 1))
+    cfg = TrainConfig(
+        steps=args.steps,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        telemetry_path=args.telemetry,
+    )
+    if args.checkpoint_dir and not args.resume:
+        # fresh run: ignore stale checkpoints by training from step 0 only
+        # if the dir is empty; otherwise demand an explicit --resume.
+        from repro.checkpoint import latest_step
+
+        last = latest_step(args.checkpoint_dir)
+        if last is not None:
+            raise SystemExit(
+                f"{args.checkpoint_dir} already has step_{last}; "
+                f"pass --resume to continue it"
+            )
+
+    print(f"training {config.name}: {model.param_count():,} params, "
+          f"{len(jax.devices())} device(s)")
+    trainer = Trainer(model, data, opt_cfg, cfg)
+    params, _, history = trainer.run()
+    if history:
+        first, last = history[0], history[-1]
+        print(f"loss {first['loss']:.4f} -> {last['loss']:.4f} "
+              f"({cfg.steps} steps)")
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Model zoo: every assigned architecture family, pure JAX.
+
+Families: dense (llama-style GQA), moe (top-k routed experts),
+ssm (xLSTM: mLSTM/sLSTM), hybrid (Zamba2: Mamba2 + shared attention),
+vlm (PaliGemma: SigLIP-stub + Gemma decoder), audio (Whisper enc-dec
+with conv-frontend stub).
+"""
+from repro.models.model import (
+    Model,
+    init_cache,
+    init_params,
+    loss_fn,
+    lm_logits,
+    decode_step,
+)
+
+__all__ = [
+    "Model",
+    "decode_step",
+    "init_cache",
+    "init_params",
+    "lm_logits",
+    "loss_fn",
+]

@@ -1,0 +1,174 @@
+"""Mamba2 (SSD) block — chunked parallel scan, pure JAX.
+
+State-space: per head h with state size N and head dim P,
+    S_t = exp(dt_t A_h) S_{t-1} + dt_t B_t x_t^T        (S in R^{N x P})
+    y_t = C_t^T S_t + D_h x_t
+computed with the SSD block decomposition: quadratic attention-like
+intra-chunk term + a lax.scan over chunk states for the inter-chunk
+recurrence. O(S * Q) work per sequence for chunk length Q instead of
+O(S^2); decode is a single O(N*P) state update per token (this is what
+makes the hybrid/ssm archs eligible for the 500k-context decode shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init, rmsnorm
+
+CONV_K = 4  # causal depthwise conv kernel size
+
+
+def init_mamba2(key, d_model, d_state, dtype, expand=2, head_dim=64):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # fused in_proj: [z, x, B, C, dt]
+        "w_in": _dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.full((n_heads,), np.log(np.expm1(0.01)), dtype=jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "w_out": _dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _split_in(params, x, d_model, d_state, d_inner, n_heads):
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xbc: (B, S, C)."""
+    if conv_state is not None:  # decode: (B, CONV_K-1, C) history
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, C)
+        y = jnp.einsum("bkc,kc->bc", window, conv_w.astype(xbc.dtype))[:, None]
+        new_state = window[:, 1:]
+        return jax.nn.silu(y + conv_b.astype(xbc.dtype)), new_state
+    pad = jnp.zeros(xbc.shape[:1] + (CONV_K - 1,) + xbc.shape[2:], xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    # stack K shifted views: (B, S, K, C)
+    views = jnp.stack([xp[:, i : i + xbc.shape[1]] for i in range(CONV_K)], axis=2)
+    y = jnp.einsum("bskc,kc->bsc", views, conv_w.astype(xbc.dtype))
+    return jax.nn.silu(y + conv_b.astype(xbc.dtype)), None
+
+
+def _segsum(a):
+    """Lower-triangular pairwise cumulative sums: out[.., i, j] = sum_{j<t<=i} a_t."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2(params, x, *, d_state, expand=2, head_dim=64, chunk=256, state=None):
+    """x: (B, S, D). If ``state`` given (decode), S must be 1.
+
+    state = {"ssm": (B, H, N, P), "conv": (B, CONV_K-1, conv_dim)}.
+    Returns (y, new_state) in decode mode, else y.
+    """
+    b, s, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    z, xs, bmat, cmat, dt = _split_in(params, x, d_model, d_state, d_inner, n_heads)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    decode = state is not None
+    if decode:
+        conv_out, new_conv = _causal_conv(
+            xbc, params["conv_w"], params["conv_b"], state["conv"]
+        )
+    else:
+        conv_out, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(b, s, n_heads, head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    if decode:
+        # one step: S' = exp(dt a) S + dt B x^T ; y = C S' + D x
+        ssm = state["ssm"]  # (B, H, N, P)
+        da = jnp.exp(dt[:, 0] * a)  # (B, H)
+        dbx = jnp.einsum(
+            "bh,bn,bhp->bhnp", dt[:, 0], bmat[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        ssm_new = da[..., None, None] * ssm + dbx
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), ssm_new)
+        y = y + params["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, d_inner).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rmsnorm({"scale": params["norm_scale"]}, y)
+        out = y @ params["w_out"].astype(x.dtype)
+        return out, {"ssm": ssm_new, "conv": new_conv}
+
+    # ---- chunked SSD (train/prefill) ----
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xh = xh.reshape(b, nc, q, n_heads, head_dim)
+    bm = bmat.reshape(b, nc, q, d_state).astype(jnp.float32)
+    cm = cmat.reshape(b, nc, q, d_state).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, n_heads)
+    ac = dtc * a  # (B, NC, Q, H) log-decay increments
+    ac_cum = jnp.cumsum(ac, axis=2)  # within-chunk cumulative
+    xdt = xh.astype(jnp.float32) * dtc[..., None]  # dt-weighted inputs
+
+    # intra-chunk: attention-like quadratic term
+    lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cm, bm)  # (B,NC,Q,Q)
+    y_intra = jnp.einsum("bchij,bcij,bcjhp->bcihp", lmat, scores, xdt)
+    # chunk states: S_c = sum_j exp(a_end - a_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(ac_cum[:, :, -1:, :] - ac_cum)  # (B,NC,Q,H)
+    s_local = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end, bm, xdt)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(ac_cum[:, :, -1, :])  # (B, NC, H)
+
+    def scan_fn(carry, inp):
+        s_prev = carry  # (B, H, N, P)
+        dec, s_loc = inp  # (B,H), (B,H,N,P)
+        s_new = dec[..., None, None] * s_prev + s_loc
+        return s_new, s_prev
+
+    init = jnp.zeros((b, n_heads, d_state, head_dim), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (chunk_decay.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B, NC, H, N, P)
+
+    # inter-chunk contribution: C_i exp(cum_a_i) S_{c-1}
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", cm, jnp.exp(ac_cum), s_prevs
+    )
+    y = y_intra + y_inter  # (B, NC, Q, H, P)
+    y = y + params["d_skip"][None, None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def init_mamba2_state(batch, d_model, d_state, dtype, expand=2, head_dim=64):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,176 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM.
+
+mLSTM: per-head matrix memory C in R^{hd x hd} with exponential gating,
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+stabilized in log space (m_t tracks the running max exponent). Computed
+with a lax.scan over time (training) and a single-step state update for
+decode (O(hd^2) per token — qualifies for the 500k decode shape).
+
+sLSTM: scalar memory with recurrent gate connections; strictly
+sequential, implemented as a lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------- mLSTM
+def init_mlstm(key, d_model, num_heads, dtype, proj_factor=2.0):
+    d_in = int(d_model * proj_factor)
+    hd = d_in // num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense_init(ks[0], (d_model, 2 * d_in), dtype),  # [x_in, z gate]
+        "wq": _dense_init(ks[1], (d_in, d_in), dtype),
+        "wk": _dense_init(ks[2], (d_in, d_in), dtype),
+        "wv": _dense_init(ks[3], (d_in, d_in), dtype),
+        "w_if": _dense_init(ks[4], (d_in, 2 * num_heads), jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.linspace(3.0, 6.0, num_heads).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype=dtype),
+        "w_down": _dense_init(ks[5], (d_in, d_model), dtype),
+    }
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, c0, n0, m0):
+    """Sequential mLSTM. q,k,v: (B,S,H,hd); gates (B,S,H). Returns h + state."""
+
+    def step(carry, inp):
+        c, n, m = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qt, kt, vt, li, lf = inp  # (B,H,hd) x3, (B,H) x2
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s[..., None, None] * c + i_s[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )
+        n_new = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", c_new, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, qt)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (c_new, n_new, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3), (c, n, m)  # (B,S,H,hd)
+
+
+def mlstm(params, x, *, num_heads, proj_factor=2.0, state=None):
+    """x: (B,S,D). state (decode): {"c","n","m"}; S must be 1 then."""
+    b, s, d_model = x.shape
+    d_in = int(d_model * proj_factor)
+    hd = d_in // num_heads
+    up = x @ params["w_up"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = (x_in @ params["wq"].astype(x.dtype)).reshape(b, s, num_heads, hd)
+    k = (x_in @ params["wk"].astype(x.dtype)).reshape(b, s, num_heads, hd) / np.sqrt(
+        hd
+    )
+    v = (x_in @ params["wv"].astype(x.dtype)).reshape(b, s, num_heads, hd)
+    gates = x_in.astype(jnp.float32) @ params["w_if"]
+    log_i = jax.nn.log_sigmoid(gates[..., :num_heads] + params["b_i"])
+    log_f = jax.nn.log_sigmoid(gates[..., num_heads:] + params["b_f"])
+
+    if state is None:
+        c0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, num_heads, hd), jnp.float32)
+        m0 = jnp.zeros((b, num_heads), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+    h, (c, n, m) = _mlstm_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_i, log_f, c0, n0, m0,
+    )
+    h = h.reshape(b, s, d_in).astype(x.dtype)
+    h = rmsnorm({"scale": params["norm_scale"]}, h)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(x.dtype)
+    if state is None:
+        return out
+    return out, {"c": c, "n": n, "m": m}
+
+
+def init_mlstm_state(batch, d_model, num_heads, proj_factor=2.0):
+    d_in = int(d_model * proj_factor)
+    hd = d_in // num_heads
+    return {
+        "c": jnp.zeros((batch, num_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, hd), jnp.float32),
+        "m": jnp.zeros((batch, num_heads), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- sLSTM
+def init_slstm(key, d_model, num_heads, dtype):
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates (i, f, z, o)
+        "w_x": _dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        # recurrent (block-diagonal per head): (H, hd, 4*hd)
+        "w_h": (jax.random.normal(ks[1], (num_heads, hd, 4 * hd)) / np.sqrt(hd)).astype(
+            dtype
+        ),
+        "b": jnp.concatenate(
+            [
+                jnp.zeros((d_model,)),
+                jnp.ones((d_model,)),  # forget-gate bias > 0
+                jnp.zeros((2 * d_model,)),
+            ]
+        ).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_model,), dtype=dtype),
+        "w_out": _dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def slstm(params, x, *, num_heads, state=None):
+    """x: (B,S,D). Recurrent scalar-memory LSTM with exponential gating."""
+    b, s, d_model = x.shape
+    hd = d_model // num_heads
+    xg = (x @ params["w_x"].astype(x.dtype)).astype(jnp.float32) + params["b"]
+    xg = xg.reshape(b, s, 4, num_heads, hd)
+
+    def step(carry, xg_t):
+        c, n, m, h = carry  # (B,H,hd) x3 + hidden (B,H,hd)
+        rec = jnp.einsum("bhi,hij->bhj", h, params["w_h"].astype(jnp.float32))
+        rec = rec.reshape(b, num_heads, 4, hd).transpose(0, 2, 1, 3)
+        gi, gf, gz, go = [xg_t[:, i] + rec[:, i] for i in range(4)]
+        m_new = jnp.maximum(gf + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(gf + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(gz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if state is None:
+        zeros = jnp.zeros((b, num_heads, hd), jnp.float32)
+        carry0 = (zeros, zeros, jnp.zeros((b, num_heads, hd), jnp.float32), zeros)
+    else:
+        carry0 = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(step, carry0, xg.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d_model).astype(x.dtype)
+    h = rmsnorm({"scale": params["norm_scale"]}, h)
+    out = h @ params["w_out"].astype(x.dtype)
+    if state is None:
+        return out
+    c, n, m, hh = carry
+    return out, {"c": c, "n": n, "m": m, "h": hh}
+
+
+def init_slstm_state(batch, d_model, num_heads):
+    hd = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}

@@ -1,0 +1,16 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import (
+    compress_bf16_ef,
+    decompress_bf16_ef,
+    init_error_feedback,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "compress_bf16_ef",
+    "cosine_schedule",
+    "decompress_bf16_ef",
+    "init_error_feedback",
+]

@@ -1,0 +1,14 @@
+from repro.runtime.train_loop import Trainer, TrainConfig, make_train_step
+from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
+from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
+
+__all__ = [
+    "CodedLMHead",
+    "ElasticController",
+    "ServeConfig",
+    "Server",
+    "StragglerTracker",
+    "TrainConfig",
+    "Trainer",
+    "make_train_step",
+]

@@ -1,0 +1,114 @@
+"""Fault tolerance & elasticity for the coded-computation runtime.
+
+Straggler mitigation IS the paper's contribution (the coded redundancy
+lets the master proceed with the fastest responders); this module adds
+the fleet-control pieces around it:
+
+* ``StragglerTracker`` — online (mu, alpha) estimation per group from
+  observed round-trip times (shifted-exponential MLE, exponential
+  forgetting) and deadline-based failure detection.
+* ``ElasticController`` — membership changes (workers join/leave, groups
+  added on scale-up) trigger a closed-form re-plan (Theorem 2 is O(G) —
+  no iterative optimizer in the failure path).
+* ``deadline_for`` — converts the planner's expected-latency lower bound
+  into an actionable per-round deadline (T* x safety factor): workers
+  that miss it are erasures for the MDS decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.planner import DeploymentPlan, plan_deployment, replan_on_membership_change
+from repro.core.runtime_model import ClusterSpec, GroupSpec
+
+
+def deadline_for(plan: DeploymentPlan, safety: float = 3.0) -> float:
+    """Per-round cutoff: T* (expected optimum) times a safety factor."""
+    return float(plan.t_star) * safety
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    """Tracks per-group runtime estimates and detects failed workers."""
+
+    cluster: ClusterSpec
+    forget: float = 0.9  # exponential forgetting of old estimates
+    fail_after: int = 3  # consecutive missed deadlines => failed
+    # paper Section IV: the shifted-exp latency model is only meaningful
+    # for mu < ~750 (W_{-1} underflows beyond); clamp the MLE accordingly
+    mu_max: float = 750.0
+    mu_min: float = 1e-6
+
+    def __post_init__(self):
+        self._mu = np.asarray([g.mu for g in self.cluster.groups], float)
+        self._alpha = np.asarray([g.alpha for g in self.cluster.groups], float)
+        self._missed = np.zeros((self.cluster.total_workers,), int)
+
+    def observe_round(self, times: np.ndarray, loads: np.ndarray, k: int,
+                      deadline: float | None = None):
+        """Update estimates from one round of per-worker round-trip times.
+
+        times: (N,) seconds (np.inf for workers that never responded).
+        loads: (N,) rows assigned. Returns the boolean finished mask.
+        """
+        times = np.asarray(times, float)
+        finished = np.isfinite(times)
+        if deadline is not None:
+            finished &= times <= deadline
+        self._missed = np.where(finished, 0, self._missed + 1)
+        # group-wise shifted-exp MLE on the finished workers
+        start = 0
+        for j, g in enumerate(self.cluster.groups):
+            sl = slice(start, start + g.num_workers)
+            t = times[sl][finished[sl]]
+            l = loads[sl][finished[sl]]
+            start += g.num_workers
+            if t.size < 2:
+                continue
+            norm = t * (k / np.maximum(l, 1))  # normalize to full-task scale
+            a_hat = float(norm.min())
+            mu_hat = 1.0 / max(float(norm.mean() - a_hat), 1e-9)
+            mu_hat = float(np.clip(mu_hat, self.mu_min, self.mu_max))
+            self._alpha[j] = self.forget * self._alpha[j] + (1 - self.forget) * a_hat
+            self._mu[j] = self.forget * self._mu[j] + (1 - self.forget) * mu_hat
+        return finished
+
+    @property
+    def failed_workers(self) -> np.ndarray:
+        return np.flatnonzero(self._missed >= self.fail_after)
+
+    def estimated_cluster(self) -> ClusterSpec:
+        """Current membership (failed workers removed) + current estimates."""
+        groups = []
+        start = 0
+        for j, g in enumerate(self.cluster.groups):
+            sl = np.arange(start, start + g.num_workers)
+            start += g.num_workers
+            alive = int(np.sum(self._missed[sl] < self.fail_after))
+            if alive > 0:
+                groups.append(GroupSpec(alive, float(self._mu[j]), float(self._alpha[j])))
+        return ClusterSpec(tuple(groups))
+
+
+class ElasticController:
+    """Re-plans the coded deployment when the fleet changes.
+
+    The plan is recomputed from Theorem 2's closed form — re-planning is
+    O(G) and happens inline (no coordinator round trip), which is what
+    makes elasticity practical at 1000+ workers.
+    """
+
+    def __init__(self, cluster: ClusterSpec, k: int, *, scheme: str = "optimal"):
+        self.k = k
+        self.plan = plan_deployment(cluster, k, scheme=scheme)
+        self.replans = 0
+
+    def on_membership_change(self, new_cluster: ClusterSpec) -> DeploymentPlan:
+        self.plan = replan_on_membership_change(self.plan, new_cluster)
+        self.replans += 1
+        return self.plan
+
+    def on_estimates_update(self, tracker: StragglerTracker) -> DeploymentPlan:
+        return self.on_membership_change(tracker.estimated_cluster())

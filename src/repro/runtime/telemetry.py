@@ -1,0 +1,39 @@
+"""Step-level telemetry: timing EMAs, tokens/s, JSONL sink."""
+from __future__ import annotations
+
+import json
+import time
+
+
+class Telemetry:
+    def __init__(self, path: str | None = None, ema: float = 0.9):
+        self.path = path
+        self.ema = ema
+        self.step_time: float | None = None
+        self._last: float | None = None
+        self._fh = open(path, "a") if path else None
+
+    def tick(self) -> float | None:
+        """Call once per step; returns smoothed step time."""
+        now = time.perf_counter()
+        if self._last is not None:
+            dt = now - self._last
+            self.step_time = (
+                dt if self.step_time is None
+                else self.ema * self.step_time + (1 - self.ema) * dt
+            )
+        self._last = now
+        return self.step_time
+
+    def log(self, step: int, metrics: dict, tokens_per_step: int | None = None):
+        rec = {"step": step, **{k: float(v) for k, v in metrics.items()}}
+        if self.step_time and tokens_per_step:
+            rec["tokens_per_s"] = tokens_per_step / self.step_time
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def close(self):
+        if self._fh:
+            self._fh.close()

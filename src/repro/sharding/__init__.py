@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    batch_specs,
+    cache_spec,
+    make_batch_sharding,
+    make_cache_sharding,
+    make_param_sharding,
+    param_spec,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_spec",
+    "make_batch_sharding",
+    "make_cache_sharding",
+    "make_param_sharding",
+    "param_spec",
+]

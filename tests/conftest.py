@@ -1,0 +1,7 @@
+import jax
+
+# Core allocation math is validated at float64 (scipy oracle comparison).
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke
+# tests must see the real single-device CPU; only launch/dryrun.py uses
+# 512 placeholder devices (in its own process).
+jax.config.update("jax_enable_x64", True)

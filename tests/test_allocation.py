@@ -1,0 +1,167 @@
+"""Allocation math vs the paper's claims (Theorems 1-4, Remark 1, App D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.special import lambertw as scipy_lambertw
+
+from repro.core import (
+    ClusterSpec,
+    optimal_allocation,
+    optimal_r,
+    reisizadeh_allocation,
+    t_star,
+    uniform_given_n,
+    uniform_given_r,
+    xi_star,
+)
+from repro.core.allocation import group_code_split
+from repro.core.runtime_model import expected_order_stat, harmonic, xi
+
+
+def paper_cluster_fig4(N: int) -> ClusterSpec:
+    """Fig. 4 setting: N_j = (3,4,5,6,7)N/25, mu = (16,12,8,4,1)."""
+    frac = np.array([3, 4, 5, 6, 7]) / 25.0
+    return ClusterSpec.make((frac * N).astype(int), [16, 12, 8, 4, 1], 1.0)
+
+
+def test_optimal_r_formula():
+    """eq. (15) against a direct scipy computation."""
+    c = ClusterSpec.make([100, 200], [1.0, 2.0], [1.0, 0.5])
+    n, mu, al = c.arrays()
+    r = np.asarray(optimal_r(n, mu, al))
+    for j, g in enumerate(c.groups):
+        w = scipy_lambertw(-np.exp(-(g.alpha * g.mu + 1.0)), k=-1).real
+        np.testing.assert_allclose(r[j], g.num_workers * (1 + 1 / w), rtol=1e-10)
+        assert 0 < r[j] < g.num_workers
+
+
+def test_theorem1_equalization():
+    """The optimal plan equalizes per-group expected latencies (Thm 1)."""
+    c = ClusterSpec.make([1000, 2000, 3000], [2.0, 1.0, 0.5], 1.0)
+    k = 10_000
+    plan = optimal_allocation(c, k)
+    n, mu, al = c.arrays()
+    lam = np.asarray(
+        expected_order_stat(jnp.asarray(plan.loads), jnp.asarray(plan.r), n, mu, al, k)
+    )
+    np.testing.assert_allclose(lam, lam[0], rtol=1e-9)
+    # ... and each equals the lower bound T* (eq. (21)).
+    np.testing.assert_allclose(lam, plan.t_star, rtol=1e-9)
+
+
+def test_mds_constraint():
+    """sum_j r_j * l_j = k  (eq. (5)) holds for the real-valued optimum."""
+    c = ClusterSpec.make([300, 600], [4.0, 0.5], 1.0)
+    k = 5000
+    plan = optimal_allocation(c, k)
+    np.testing.assert_allclose(
+        np.sum(plan.r * plan.loads * np.array([1.0])), k, rtol=1e-9
+    )
+    got = sum(
+        r * l for r, l in zip(plan.r, plan.loads)
+    )
+    np.testing.assert_allclose(got, k, rtol=1e-9)
+
+
+def test_remark1_homogeneous_reduces_to_lee_et_al():
+    """Remark 1: equal (mu, alpha) groups -> the [4] homogeneous optimum."""
+    mu, alpha, k = 2.0, 1.0, 4096
+    c = ClusterSpec.make([100, 200, 300], [mu, mu, mu], alpha)
+    plan = optimal_allocation(c, k)
+    w = scipy_lambertw(-np.exp(-(alpha * mu + 1.0)), k=-1).real
+    N = c.total_workers
+    l_expected = k / (N * (1 + 1 / w))
+    np.testing.assert_allclose(plan.loads, l_expected, rtol=1e-10)
+    np.testing.assert_allclose(plan.t_star, -w / (mu * N), rtol=1e-10)
+
+
+def test_t_star_theta_1_over_N():
+    """T* = Theta(1/N) (paper Fig. 2 discussion)."""
+    ts = []
+    for scale in [1, 2, 4, 8]:
+        c = ClusterSpec.make(
+            [1000 * scale, 2000 * scale, 3000 * scale], [2.0, 1.0, 0.5], 1.0
+        )
+        n, mu, al = c.arrays()
+        ts.append(float(t_star(n, mu, al)))
+    ratios = np.array(ts[:-1]) / np.array(ts[1:])
+    np.testing.assert_allclose(ratios, 2.0, rtol=1e-9)
+
+
+def test_optimal_beats_baselines_on_lower_bound():
+    """f(r) is minimized at r* (Lemma 2/3): any perturbation is worse."""
+    c = ClusterSpec.make([100, 150], [3.0, 0.7], 1.0)
+    n, mu, al = c.arrays()
+    r_star = np.asarray(optimal_r(n, mu, al))
+
+    def f(r):
+        x = xi(jnp.asarray(r), n, mu, al)
+        return float(1.0 / jnp.sum(jnp.asarray(r) / x))
+
+    base = f(r_star)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        pert = r_star + rng.uniform(-1, 1, size=2) * 0.1 * r_star
+        pert = np.clip(pert, 1e-3, np.asarray(n) - 1e-3)
+        assert f(pert) >= base - 1e-12
+
+
+def test_group_code_split_solves_eq28_26():
+    c = ClusterSpec.make([100, 200, 300], [3.0, 2.0, 1.0], 1.0)
+    r = 200
+    split = group_code_split(c, r)
+    np.testing.assert_allclose(split.sum(), r, rtol=1e-9)
+    # eq. (28): equalized exponential tails
+    n, mu, _ = c.arrays()
+    tails = np.log(np.asarray(n) / (np.asarray(n) - split)) / np.asarray(mu)
+    np.testing.assert_allclose(tails, tails[0], rtol=1e-6)
+
+
+def test_uniform_r_latency_floor():
+    """[33] scheme's latency floor is 1/r (Section III-D-2)."""
+    c = paper_cluster_fig4(2500)
+    plan = uniform_given_r(c, k=10_000, r=100)
+    assert plan.t_star == pytest.approx(1.0 / 100)
+    np.testing.assert_allclose(plan.loads, 100.0)  # k/r rows each
+
+
+def test_reisizadeh_matches_corollary2_optimum():
+    """Paper Fig. 9 claim: [32]'s allocation == Cor. 2 optimum (per-row)."""
+    c = ClusterSpec.make([300, 300, 400], [1.0, 4.0, 8.0], [1.0, 4.0, 12.0])
+    k = 100_000
+    ours = optimal_allocation(c, k, per_row=True)
+    theirs = reisizadeh_allocation(c, k)
+    np.testing.assert_allclose(theirs.loads, ours.loads, rtol=1e-8)
+    np.testing.assert_allclose(theirs.n, ours.n, rtol=1e-8)
+
+
+def test_harmonic_matches_direct_sum():
+    for n in [1, 5, 100]:
+        np.testing.assert_allclose(
+            float(harmonic(n)), sum(1.0 / i for i in range(1, n + 1)), rtol=1e-12
+        )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(min_value=20, max_value=500), min_size=1, max_size=5),
+    st.lists(st.floats(min_value=0.05, max_value=50.0), min_size=5, max_size=5),
+    st.floats(min_value=0.2, max_value=5.0),
+)
+def test_property_plan_invariants(ns, mus, alpha):
+    """Invariants for arbitrary clusters: positivity, r_j < N_j, eq. (5),
+    equalization, and n >= k (code rate <= 1)."""
+    mus = mus[: len(ns)]
+    c = ClusterSpec.make(ns, mus, alpha)
+    k = 10_000
+    plan = optimal_allocation(c, k)
+    assert np.all(plan.loads > 0)
+    assert np.all(plan.r > 0)
+    assert np.all(plan.r < np.array([g.num_workers for g in c.groups]))
+    np.testing.assert_allclose(np.dot(plan.r, plan.loads), k, rtol=1e-8)
+    assert plan.n >= k - 1e-6
+    assert plan.t_star > 0
+    # integerized loads cover at least as much as the real plan
+    assert plan.n_int >= np.floor(plan.n) - 1e-6

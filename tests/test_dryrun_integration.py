@@ -1,0 +1,33 @@
+"""Integration: the dry-run lowers+compiles real cells in a subprocess.
+
+Runs the cheapest cell (whisper-tiny prefill) end-to-end on the actual
+512-placeholder-device production mesh. Subprocess because the XLA
+device-count flag must be set before jax initializes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_smallest_cell_single_pod(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "prefill_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    path = tmp_path / "whisper-tiny_prefill_32k_single.json"
+    rec = json.loads(path.read_text())
+    assert rec["chips"] == 256
+    assert rec["hlo_flops_per_device"] > 0
+    assert rec["t_compute"] > 0 and rec["t_memory"] > 0
+    assert rec["bottleneck"] in ("t_compute", "t_memory", "t_collective")

@@ -1,0 +1,79 @@
+"""Lambert W validation against the scipy oracle + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.special import lambertw as scipy_lambertw
+
+from repro.core.lambertw import lambertw0, lambertwm1
+
+
+def test_wm1_matches_scipy_grid():
+    z = -np.exp(-np.linspace(1.0001, 50, 500))  # spans [-1/e, ~0)
+    ours = np.asarray(lambertwm1(z))
+    ref = scipy_lambertw(z, k=-1).real
+    np.testing.assert_allclose(ours, ref, rtol=1e-10, atol=1e-12)
+
+
+def test_w0_matches_scipy_grid():
+    z = np.concatenate([
+        -np.exp(-np.linspace(1.0001, 30, 200)),
+        np.linspace(0.0, 100.0, 300),
+        np.logspace(2, 8, 50),
+    ])
+    ours = np.asarray(lambertw0(z))
+    ref = scipy_lambertw(z, k=0).real
+    np.testing.assert_allclose(ours, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_wm1_near_branch_point():
+    # scipy snaps to -1.0 very near the branch point, so use the
+    # defining equation + the exact local expansion as the oracle:
+    # z = -e^{-1}(1 - eps)  =>  W_{-1}(z) = -1 - sqrt(2 eps) + O(eps).
+    eps = np.logspace(-12, -2, 40)
+    z = -np.exp(-1.0) + eps * np.exp(-1.0)
+    ours = np.asarray(lambertwm1(z))
+    assert np.all(ours <= -1.0)
+    # local expansion to 2 orders: -1 + p - p^2/3 with p = -sqrt(2 eps)
+    p = -np.sqrt(2 * eps)
+    approx = -1.0 + p - p * p / 3.0
+    # 1e-10 slack: computing 1 + e*z in float64 loses ~2.5e-16 absolute,
+    # which perturbs p = -sqrt(2(1+ez)) by up to ~2e-10 for eps ~ 1e-12.
+    assert np.all(np.abs(ours - approx) <= np.abs(p**3) + 1e-9)
+    # defining equation residual (scaled by local curvature |z + 1/e|)
+    resid = ours * np.exp(ours) - z
+    np.testing.assert_allclose(resid, 0.0, atol=1e-9 * np.exp(-1.0))
+    # strictly decreasing in eps
+    assert np.all(np.diff(ours) < 0)
+
+
+def test_wm1_domain():
+    assert np.isnan(float(lambertwm1(0.1)))
+    assert np.isnan(float(lambertwm1(-1.0)))  # below -1/e
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=1.0001, max_value=200.0))
+def test_wm1_inverse_property(t):
+    """W_{-1}(z) e^{W_{-1}(z)} = z for z = -e^{-t}, t > 1."""
+    z = -np.exp(-t)
+    w = float(lambertwm1(z))
+    assert w <= -1.0
+    np.testing.assert_allclose(w * np.exp(w), z, rtol=1e-8, atol=1e-300)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-0.35, max_value=1e6))
+def test_w0_inverse_property(z):
+    w = float(lambertw0(z))
+    assert w >= -1.0
+    np.testing.assert_allclose(w * np.exp(w), z, rtol=1e-7, atol=1e-9)
+
+
+def test_jit_and_vmap():
+    import jax
+
+    z = jnp.asarray([-0.3, -0.1, -0.01])
+    a = jax.jit(lambertwm1)(z)
+    b = jax.vmap(lambertwm1)(z)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)

@@ -1,0 +1,87 @@
+"""§Perf hillclimb knobs preserve correctness (EXPERIMENTS.md §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.model import Model
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _toks(c, b=2, s=64):
+    return jax.random.randint(KEY, (b, s), 0, c.vocab_size).astype(jnp.int32)
+
+
+def test_causal_block_skip_matches_baseline_fwd_and_bwd():
+    c0 = ARCHS["granite-3-2b"].reduced()
+    c1 = dataclasses.replace(c0, causal_block_skip=True)
+    params = Model(c0).init_params(KEY)
+    toks = _toks(c0, s=96)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = Model(c0).loss_fn(params, batch)
+    l1, _ = Model(c1).loss_fn(params, batch)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-5)
+    g0 = jax.grad(lambda p: Model(c0).loss_fn(p, batch)[0])(params)
+    g1 = jax.grad(lambda p: Model(c1).loss_fn(p, batch)[0])(params)
+    for a, b_ in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b_, np.float32),
+            rtol=1e-3, atol=1e-4,
+        )
+
+
+def test_causal_block_skip_with_sliding_window():
+    c0 = ARCHS["h2o-danube-3-4b"].reduced()  # window 64
+    c1 = dataclasses.replace(c0, causal_block_skip=True)
+    params = Model(c0).init_params(KEY)
+    toks = _toks(c0, s=96)
+    l0 = Model(c0).lm_logits(params, toks)
+    l1 = Model(c1).lm_logits(params, toks)
+    np.testing.assert_allclose(
+        np.asarray(l0, np.float32), np.asarray(l1, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_bf16_logits_close_and_loss_finite():
+    c0 = ARCHS["qwen3-0.6b"].reduced()
+    c1 = dataclasses.replace(c0, logits_dtype="bfloat16")
+    params = Model(c0).init_params(KEY)
+    toks = _toks(c0)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = Model(c0).loss_fn(params, batch)
+    l1, _ = Model(c1).loss_fn(params, batch)
+    assert float(l1) == pytest.approx(float(l0), rel=2e-2)
+
+
+def test_int8_kv_cache_decode_close():
+    c0 = ARCHS["granite-3-2b"].reduced()
+    c1 = dataclasses.replace(c0, kv_quant=True)
+    m0, m1 = Model(c0), Model(c1)
+    params = m0.init_params(KEY)
+    toks = _toks(c0, s=24)
+
+    def run(m):
+        cache = m.init_cache(2, 32)
+        outs = []
+        step = jax.jit(m.decode_step)
+        for pos in range(24):
+            lg, cache = step(params, cache, toks[:, pos], jnp.int32(pos))
+            outs.append(lg)
+        return jnp.stack(outs, 1)
+
+    base, quant = run(m0), run(m1)
+    agree = float(jnp.mean(jnp.argmax(base, -1) == jnp.argmax(quant, -1)))
+    assert agree > 0.9, agree
+    assert float(jnp.max(jnp.abs(base - quant))) < 0.1
+
+
+def test_int8_cache_is_actually_int8():
+    c = dataclasses.replace(ARCHS["granite-3-2b"].reduced(), kv_quant=True)
+    cache = Model(c).init_cache(2, 16)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    assert cache["kv"]["k_scale"].dtype == jnp.float16

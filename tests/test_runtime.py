@@ -1,0 +1,176 @@
+"""Runtime layers: trainer resume, fault tolerance, coded serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.core.planner import plan_deployment
+from repro.core.runtime_model import ClusterSpec
+from repro.data import SyntheticLMData
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.fault_tolerance import (
+    ElasticController,
+    StragglerTracker,
+    deadline_for,
+)
+from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
+from repro.runtime.train_loop import (
+    TrainConfig,
+    Trainer,
+    aggregate_with_erasures,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ trainer
+def _mk_trainer(tmp_path, steps, ckpt_every=5, schedule_steps=10):
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    sh = ShapeConfig("t", 32, 2, "train")
+    data = SyntheticLMData(c, sh, seed=1)
+    # schedule_steps fixed across runs so resume sees the same LR curve
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=schedule_steps)
+    cfg = TrainConfig(steps=steps, checkpoint_dir=str(tmp_path),
+                      checkpoint_every=ckpt_every, log_every=1)
+    return Trainer(m, data, opt_cfg, cfg)
+
+
+def test_trainer_runs_and_loss_finite(tmp_path):
+    t = _mk_trainer(tmp_path, steps=6)
+    params, _, history = t.run()
+    assert all(np.isfinite(h["loss"]) for h in history)
+
+
+def test_trainer_resume_bitwise_equal(tmp_path):
+    """10 straight steps == 5 steps + checkpoint restart + 5 steps."""
+    t_full = _mk_trainer(tmp_path / "a", steps=10, ckpt_every=100)
+    p_full, _, _ = t_full.run()
+
+    t1 = _mk_trainer(tmp_path / "b", steps=5, ckpt_every=5)
+    t1.run()
+    t2 = _mk_trainer(tmp_path / "b", steps=10, ckpt_every=5)
+    p_resumed, _, _ = t2.run()
+
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_resumed)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+def test_aggregate_with_erasures_rescales():
+    g1 = {"w": jnp.ones(4)}
+    g2 = {"w": 3 * jnp.ones(4)}
+    g3 = {"w": 100 * jnp.ones(4)}  # straggler — dropped
+    out = aggregate_with_erasures([g1, g2, g3], [10, 10, 10], [True, True, False])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2 * np.ones(4))
+
+
+# ---------------------------------------------------------- fault tolerance
+def test_straggler_tracker_estimates_mu():
+    cluster = ClusterSpec.make([50, 50], [4.0, 1.0])
+    plan = plan_deployment(cluster, k=1000)
+    tracker = StragglerTracker(cluster, forget=0.0)  # no smoothing: one shot
+    key = KEY
+    from repro.core.runtime_model import sample_worker_times
+
+    loads = jnp.asarray(plan.loads_per_worker, jnp.float32)
+    mus = jnp.repeat(jnp.asarray([4.0, 1.0]), 50)
+    alphas = jnp.ones(100)
+    t = np.asarray(sample_worker_times(key, loads, mus, alphas, 1000, 200))
+    for i in range(200):
+        tracker.observe_round(t[i], np.asarray(plan.loads_per_worker), 1000)
+    est = tracker.estimated_cluster()
+    assert est.groups[0].mu == pytest.approx(4.0, rel=0.35)
+    assert est.groups[1].mu == pytest.approx(1.0, rel=0.35)
+
+
+def test_failure_detection_and_elastic_replan():
+    cluster = ClusterSpec.make([10, 10], [2.0, 1.0])
+    tracker = StragglerTracker(cluster, fail_after=2)
+    plan0 = plan_deployment(cluster, k=100)
+    times = np.ones(20)
+    times[3] = np.inf  # worker 3 dead
+    loads = np.asarray(plan0.loads_per_worker)
+    tracker.observe_round(times, loads, 100)
+    tracker.observe_round(times, loads, 100)
+    assert 3 in tracker.failed_workers
+    est = tracker.estimated_cluster()
+    assert est.total_workers == 19
+
+    ctl = ElasticController(cluster, k=100)
+    new_plan = ctl.on_estimates_update(tracker)
+    assert ctl.replans == 1
+    assert new_plan.num_workers == 19
+    assert new_plan.n >= 100  # still a valid (n, k) code
+
+
+def test_deadline_positive():
+    cluster = ClusterSpec.make([20], [1.0])
+    plan = plan_deployment(cluster, k=100)
+    assert deadline_for(plan) > plan.t_star > 0
+
+
+# ------------------------------------------------------------ coded serving
+def test_coded_lm_head_exact_recovery_all_finish():
+    c = ARCHS["granite-3-2b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    cluster = ClusterSpec.make([4, 4], [2.0, 0.5])
+    head = CodedLMHead(params["embed"]["table"], cluster, block_rows=64)
+    h = jax.random.normal(KEY, (3, c.d_model))
+    products = head.worker_products(h)
+    logits, ok = head.decode_logits(products, np.ones(head.plan.num_workers, bool))
+    assert ok
+    expected = np.asarray(h @ head.table.T)
+    np.testing.assert_allclose(
+        logits[:, : head.table.shape[0]], expected, rtol=1e-3, atol=1e-3
+    )
+
+
+def test_coded_lm_head_tolerates_erasures():
+    c = ARCHS["granite-3-2b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    cluster = ClusterSpec.make([6, 6], [2.0, 0.5])
+    head = CodedLMHead(params["embed"]["table"], cluster, block_rows=64)
+    h = jax.random.normal(KEY, (2, c.d_model))
+    products = head.worker_products(h)
+    # kill workers until just enough blocks survive
+    mask = np.ones(head.plan.num_workers, bool)
+    blocks_alive = head.nb
+    for w in range(head.plan.num_workers):
+        load = int(head.plan.loads_per_worker[w])
+        if blocks_alive - load >= head.kb:
+            mask[w] = False
+            blocks_alive -= load
+    logits, ok = head.decode_logits(products, mask)
+    assert ok
+    expected = np.asarray(h @ head.table.T)
+    np.testing.assert_allclose(
+        logits[:, : head.table.shape[0]], expected, rtol=1e-3, atol=1e-3
+    )
+    # below threshold -> explicit failure signal
+    logits, ok = head.decode_logits(products, np.zeros_like(mask))
+    assert not ok
+
+
+def test_server_generate_coded_matches_uncoded():
+    """With no stragglers (huge deadline) coded decode == plain decode."""
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    prompts = jax.random.randint(KEY, (2, 4), 0, c.vocab_size).astype(jnp.int32)
+
+    plain = Server(m, params, None, ServeConfig(max_decode_steps=6))
+    out_plain = plain.generate(prompts, 6)
+
+    cluster = ClusterSpec.make([8], [5.0])  # fast workers
+    coded = Server(m, params, cluster, ServeConfig(max_decode_steps=6))
+    coded.coded_head.deadline = 1e9  # nobody misses
+    out_coded = coded.generate(prompts, 6)
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_coded))

@@ -1,0 +1,105 @@
+"""Monte Carlo simulator vs analytic order statistics + paper claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, optimal_allocation, uniform_given_r, uncoded
+from repro.core.allocation import uniform_given_n
+from repro.core.runtime_model import expected_order_stat
+from repro.core.simulator import (
+    expected_latency,
+    simulate_group_code,
+    simulate_threshold,
+)
+
+KEY = jax.random.PRNGKey(42)
+
+
+def test_single_group_matches_order_statistic():
+    """One homogeneous group: MC mean == analytic lambda_{r:N} (eq. 6)."""
+    c = ClusterSpec.make([400], [1.5], 1.0)
+    k = 1000
+    r = 300
+    load = k / r  # (N, r) MDS code with uniform loads
+    lat = simulate_threshold(KEY, c, [load], k, num_trials=40_000)
+    n, mu, al = c.arrays()
+    analytic = float(
+        expected_order_stat(load, r, n[0], mu[0], al[0], k, exact_harmonic=True)
+    )
+    assert float(jnp.mean(lat)) == pytest.approx(analytic, rel=0.01)
+
+
+def test_optimal_plan_achieves_lower_bound_asymptotically():
+    """Theorem 3: MC latency of (l*, r*) -> T* as N grows."""
+    gaps = []
+    for N in [250, 2500, 12500]:
+        frac = np.array([3, 4, 5, 6, 7]) / 25.0
+        c = ClusterSpec.make((frac * N).astype(int), [16, 12, 8, 4, 1], 1.0)
+        plan = optimal_allocation(c, k=10_000)
+        mc = expected_latency(KEY, c, plan, num_trials=4000)
+        gaps.append(mc / plan.t_star - 1.0)
+        assert mc >= plan.t_star * (1 - 0.02)  # lower bound holds (MC noise)
+    # monotone-ish convergence to the bound
+    assert gaps[-1] < gaps[0]
+    assert gaps[-1] < 0.05
+
+
+def test_optimal_beats_uniform_and_uncoded():
+    """Fig. 4 ordering: optimal < uniform(n*) < uncoded, at finite N."""
+    frac = np.array([3, 4, 5, 6, 7]) / 25.0
+    c = ClusterSpec.make((frac * 2500).astype(int), [16, 12, 8, 4, 1], 1.0)
+    k = 10_000
+    opt = optimal_allocation(c, k)
+    t_opt = expected_latency(KEY, c, opt, num_trials=4000)
+    t_uni = expected_latency(
+        KEY, c, uniform_given_n(c, k, opt.n), num_trials=4000
+    )
+    t_unc = expected_latency(KEY, c, uncoded(c, k), num_trials=4000)
+    assert t_opt < t_uni < t_unc
+    # paper: ~18% gain over uniform with the same (n*, k) code; allow slack
+    assert (t_uni - t_opt) / t_uni > 0.05
+
+
+def test_group_code_floor():
+    """[33]'s scheme flattens at 1/r while the optimal keeps improving."""
+    r = 100
+    k = 10_000
+    lats = []
+    for N in [2500, 25_000]:
+        frac = np.array([3, 4, 5, 6, 7]) / 25.0
+        c = ClusterSpec.make((frac * N).astype(int), [16, 12, 8, 4, 1], 1.0)
+        plan = uniform_given_r(c, k, r)
+        lat = float(
+            jnp.mean(
+                simulate_group_code(
+                    KEY, c, float(plan.loads[0]), plan.r, k, num_trials=3000
+                )
+            )
+        )
+        lats.append(lat)
+    # both near (above) the 1/r floor; big-N case pinned to it
+    assert lats[1] == pytest.approx(1.0 / r, rel=0.05)
+    # optimal at N=25000 is order(s) of magnitude below the floor
+    frac = np.array([3, 4, 5, 6, 7]) / 25.0
+    c = ClusterSpec.make((frac * 25_000).astype(int), [16, 12, 8, 4, 1], 1.0)
+    opt = optimal_allocation(c, k)
+    t_opt = expected_latency(KEY, c, opt, num_trials=2000)
+    assert t_opt < lats[1] / 5.0  # "orders of magnitude" at large N
+
+
+def test_infeasible_returns_inf():
+    c = ClusterSpec.make([10], [1.0], 1.0)
+    lat = simulate_threshold(KEY, c, [1.0], k=100, num_trials=8)
+    assert np.all(np.isinf(np.asarray(lat)))
+
+
+def test_integer_loads_close_to_real():
+    """Ceil-rounding has negligible latency effect for large k (paper §III-B)."""
+    c = ClusterSpec.make([300, 600], [4.0, 0.5], 1.0)
+    plan = optimal_allocation(c, k=100_000)
+    t_real = expected_latency(KEY, c, plan, num_trials=4000)
+    t_int = expected_latency(
+        KEY, c, plan, num_trials=4000, use_integer_loads=True
+    )
+    assert abs(t_int - t_real) / t_real < 0.02
