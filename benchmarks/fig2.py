@@ -9,25 +9,27 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import save, table
-from repro.core.allocation import t_star
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import Optimal
+
+K = 10_000  # T* under model (1) is k-free; the scheme API still takes a k
 
 
 def run(verbose: bool = True) -> dict:
+    scheme = Optimal()
     base = ClusterSpec.make([1000, 2000, 3000], [2.0, 1.0, 0.5], 1.0)
     qs = np.logspace(-2, 2, 17)
     rows = []
     for q in qs:
         c = base.scale_mu(float(q))
-        n_w, mu, al = c.arrays()
-        t = float(t_star(n_w, mu, al))
-        rows.append({"q": float(q), "N*T*": c.total_workers * t})
+        rows.append(
+            {"q": float(q), "N*T*": c.total_workers * scheme.lower_bound(c, K)}
+        )
     # invariance check at q=1 across N scales
     scales = []
     for s in (1, 2, 4):
         c = ClusterSpec.make([1000 * s, 2000 * s, 3000 * s], [2.0, 1.0, 0.5], 1.0)
-        n_w, mu, al = c.arrays()
-        scales.append(c.total_workers * float(t_star(n_w, mu, al)))
+        scales.append(c.total_workers * scheme.lower_bound(c, K))
     record = {
         "rows": rows,
         "N_invariance": scales,

@@ -9,11 +9,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import save, table
-from repro.core.allocation import optimal_allocation
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import Optimal
 
 
 def run(verbose: bool = True) -> dict:
+    scheme = Optimal()
     # the dip sits near mu2 ~ 1e-2; sweep wide enough to capture it
     mu2s = np.logspace(-2.5, 1.5, 30)
     n2s = [50, 100, 200, 400]
@@ -23,7 +24,7 @@ def run(verbose: bool = True) -> dict:
         rates = []
         for mu2 in mu2s:
             c = ClusterSpec.make([100, n2], [1.0, float(mu2)], 1.0)
-            plan = optimal_allocation(c, k=10_000)
+            plan = scheme.allocate(c, k=10_000)
             rates.append(plan.rate)
         grid[n2] = rates
         rows.append({"N2": n2, "rate_min": min(rates), "rate_max": max(rates),

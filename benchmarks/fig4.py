@@ -6,6 +6,8 @@ r = 100 for the group-code scheme of [33]. Claims validated:
   (b) >=10x gain over the fixed-r group code for large N (whose latency
       floors at 1/r);
   (c) ~18% lower latency than uniform with the same (n*, k) code.
+
+Every scheme runs through the typed registry + CodedComputeEngine.
 """
 from __future__ import annotations
 
@@ -13,14 +15,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import KEY, TRIALS, save, table
-from repro.core.allocation import (
-    optimal_allocation,
-    uncoded,
-    uniform_given_n,
-    uniform_given_r,
-)
+from repro.core.engine import CodedComputeEngine
 from repro.core.runtime_model import ClusterSpec
-from repro.core.simulator import expected_latency
+from repro.core.schemes import Optimal, Uncoded, UniformN, UniformR
 
 K = 100_000
 R_FIXED = 100
@@ -37,23 +34,23 @@ def run(verbose: bool = True) -> dict:
     for i, n_total in enumerate(ns):
         c = make_cluster(n_total)
         key = jax.random.fold_in(KEY, i)
-        opt = optimal_allocation(c, K)
+        opt = CodedComputeEngine(c, K, Optimal())
+        baselines = {
+            "uniform_n*": UniformN(n=opt.allocation.n),
+            "uniform_rate_half": UniformN(n=2.0 * K),
+            "uncoded": Uncoded(),
+            "group_code_r100": UniformR(r=R_FIXED),
+        }
         row = {
             "N": c.total_workers,
-            "proposed": expected_latency(key, c, opt, TRIALS),
+            "proposed": opt.expected_latency(key, TRIALS),
             "lower_bound_T*": opt.t_star,
-            "uniform_n*": expected_latency(
-                key, c, uniform_given_n(c, K, opt.n), TRIALS
-            ),
-            "uniform_rate_half": expected_latency(
-                key, c, uniform_given_n(c, K, 2.0 * K), TRIALS
-            ),
-            "uncoded": expected_latency(key, c, uncoded(c, K), TRIALS),
-            "group_code_r100": expected_latency(
-                key, c, uniform_given_r(c, K, R_FIXED), TRIALS
-            ),
             "group_code_floor": 1.0 / R_FIXED,
         }
+        for name, scheme in baselines.items():
+            row[name] = CodedComputeEngine(c, K, scheme).expected_latency(
+                key, TRIALS
+            )
         rows.append(row)
     last = rows[-1]
     record = {

@@ -10,14 +10,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import KEY, TRIALS, save, table
-from repro.core.allocation import (
-    optimal_allocation,
-    uncoded,
-    uniform_given_n,
-    uniform_given_r,
-)
-from repro.core.simulator import expected_latency
 from benchmarks.fig4 import K, R_FIXED, make_cluster
+from repro.core.engine import CodedComputeEngine
+from repro.core.schemes import Optimal, Uncoded, UniformN, UniformR
 
 
 def run(verbose: bool = True) -> dict:
@@ -27,22 +22,23 @@ def run(verbose: bool = True) -> dict:
     for i, q in enumerate(qs):
         c = base.scale_mu(float(q))
         key = jax.random.fold_in(KEY, 100 + i)
-        opt = optimal_allocation(c, K)
-        rows.append({
+        opt = CodedComputeEngine(c, K, Optimal())
+        row = {
             "q": float(q),
-            "proposed": expected_latency(key, c, opt, TRIALS),
+            "proposed": opt.expected_latency(key, TRIALS),
             "T*": opt.t_star,
-            "uniform_n*": expected_latency(
-                key, c, uniform_given_n(c, K, opt.n), TRIALS
-            ),
-            "uniform_rate_half": expected_latency(
-                key, c, uniform_given_n(c, K, 2.0 * K), TRIALS
-            ),
-            "uncoded": expected_latency(key, c, uncoded(c, K), TRIALS),
-            "group_code_r100": expected_latency(
-                key, c, uniform_given_r(c, K, R_FIXED), TRIALS
-            ),
-        })
+        }
+        baselines = {
+            "uniform_n*": UniformN(n=opt.allocation.n),
+            "uniform_rate_half": UniformN(n=2.0 * K),
+            "uncoded": Uncoded(),
+            "group_code_r100": UniformR(r=R_FIXED),
+        }
+        for name, scheme in baselines.items():
+            row[name] = CodedComputeEngine(c, K, scheme).expected_latency(
+                key, TRIALS
+            )
+        rows.append(row)
     first, last = rows[0], rows[-1]
     record = {
         "rows": rows,

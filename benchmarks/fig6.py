@@ -7,16 +7,17 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import save, table
-from repro.core.allocation import optimal_allocation
 from benchmarks.fig4 import K, make_cluster
+from repro.core.schemes import Optimal
 
 
 def run(verbose: bool = True) -> dict:
+    scheme = Optimal()
     base = make_cluster(2500)
     qs = np.logspace(-2, 1.5, 15)
     rows = []
     for q in qs:
-        plan = optimal_allocation(base.scale_mu(float(q)), K)
+        plan = scheme.allocate(base.scale_mu(float(q)), K)
         rows.append({"q": float(q), "rate": plan.rate})
     rate_mid = [r["rate"] for r in rows if 10 ** -1.5 <= r["q"] <= 10 ** -1]
     record = {

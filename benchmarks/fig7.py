@@ -10,9 +10,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import KEY, TRIALS, save, table
-from repro.core.allocation import optimal_allocation, uniform_given_n
-from repro.core.simulator import expected_latency
 from benchmarks.fig4 import K, make_cluster
+from repro.core.engine import CodedComputeEngine
+from repro.core.schemes import Optimal, UniformN
 
 RATES = [0.4, 0.5, 2.0 / 3.0, 0.8, 0.9]
 
@@ -24,14 +24,18 @@ def run(verbose: bool = True) -> dict:
     for i, q in enumerate(qs):
         c = base.scale_mu(float(q))
         key = jax.random.fold_in(KEY, 200 + i)
-        opt = optimal_allocation(c, K)
-        row = {"q": float(q), "proposed": expected_latency(key, c, opt, TRIALS),
-               "uniform_n*": expected_latency(
-                   key, c, uniform_given_n(c, K, opt.n), TRIALS)}
+        opt = CodedComputeEngine(c, K, Optimal())
+        row = {
+            "q": float(q),
+            "proposed": opt.expected_latency(key, TRIALS),
+            "uniform_n*": CodedComputeEngine(
+                c, K, UniformN(n=opt.allocation.n)
+            ).expected_latency(key, TRIALS),
+        }
         for rate in RATES:
-            row[f"rate_{rate:.2f}"] = expected_latency(
-                key, c, uniform_given_n(c, K, K / rate), TRIALS
-            )
+            row[f"rate_{rate:.2f}"] = CodedComputeEngine(
+                c, K, UniformN(n=K / rate)
+            ).expected_latency(key, TRIALS)
         rows.append(row)
     q1 = min(rows, key=lambda r: abs(r["q"] - 1.0))
     record = {

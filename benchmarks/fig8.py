@@ -10,9 +10,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import KEY, TRIALS, save, table
-from repro.core.allocation import optimal_allocation, uniform_given_n
+from repro.core.engine import CodedComputeEngine
 from repro.core.runtime_model import ClusterSpec
-from repro.core.simulator import expected_latency
+from repro.core.schemes import Optimal, UniformN
 
 K = 100_000
 
@@ -23,11 +23,13 @@ def run(verbose: bool = True) -> dict:
     rows = []
     for i, rate in enumerate(rates):
         key = jax.random.fold_in(KEY, 300 + i)
-        lat = expected_latency(key, c, uniform_given_n(c, K, K / rate), TRIALS)
+        lat = CodedComputeEngine(
+            c, K, UniformN(n=K / rate)
+        ).expected_latency(key, TRIALS)
         rows.append({"rate": float(rate), "uniform": lat})
     best = min(rows, key=lambda r: r["uniform"])
-    opt = optimal_allocation(c, K)
-    proposed = expected_latency(KEY, c, opt, TRIALS)
+    opt = CodedComputeEngine(c, K, Optimal())
+    proposed = opt.expected_latency(KEY, TRIALS)
     record = {
         "rows": rows,
         "best_uniform_rate": best["rate"],

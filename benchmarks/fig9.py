@@ -3,15 +3,18 @@
 Paper setting: N = (3N,3N,4N)/10, mu = (1,4,8), alpha = (1,4,12),
 k = 1e5. Claim: our allocation under model (30) achieves the lower bound
 T*_b and coincides with [32]'s optimal scheme.
+
+Both schemes carry MODEL_30 as their LatencyModel, so the engine
+simulates them under the per-row model without any flag threading.
 """
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import KEY, TRIALS, save, table
-from repro.core.allocation import optimal_allocation, reisizadeh_allocation
-from repro.core.runtime_model import ClusterSpec
-from repro.core.simulator import expected_latency
+from repro.core.engine import CodedComputeEngine
+from repro.core.runtime_model import ClusterSpec, LatencyModel
+from repro.core.schemes import Optimal, Reisizadeh
 
 K = 100_000
 
@@ -26,12 +29,12 @@ def run(verbose: bool = True) -> dict:
     for i, n_total in enumerate([100, 300, 1000, 3000]):
         c = make_cluster(n_total)
         key = jax.random.fold_in(KEY, 400 + i)
-        ours = optimal_allocation(c, K, per_row=True)
-        reis = reisizadeh_allocation(c, K)
+        ours = CodedComputeEngine(c, K, Optimal(model=LatencyModel.MODEL_30))
+        reis = CodedComputeEngine(c, K, Reisizadeh())
         rows.append({
             "N": c.total_workers,
-            "ours_cor2": expected_latency(key, c, ours, TRIALS, per_row=True),
-            "reisizadeh": expected_latency(key, c, reis, TRIALS, per_row=True),
+            "ours_cor2": ours.expected_latency(key, TRIALS),
+            "reisizadeh": reis.expected_latency(key, TRIALS),
             "T*_b": ours.t_star,
         })
     last = rows[-1]

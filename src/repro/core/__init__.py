@@ -1,5 +1,28 @@
-"""Core: the paper's contribution — optimal load allocation for coded
-distributed computation in heterogeneous clusters (Kim, Park, Choi 2019).
+"""Core: optimal load allocation for coded distributed computation in
+heterogeneous clusters (Kim, Park, Choi 2019), behind a typed scheme API.
+
+Layout
+------
+* ``runtime_model``  — the shifted-exponential runtime models as a typed
+  ``LatencyModel`` enum (``MODEL_1``: paper model (1), normalized by k;
+  ``MODEL_30``: per-row model of Section III-E / [32]), plus ClusterSpec
+  and order-statistic closed forms.
+* ``allocation``     — the paper's allocation math (Theorems 1-4,
+  Appendix D) as pure functions returning ``AllocationPlan``.
+* ``schemes``        — the scheme API: every allocation policy is a
+  frozen-dataclass ``AllocationScheme`` (``Optimal``, ``UniformN(n=...)``,
+  ``UniformR(r=...)``, ``Reisizadeh``, ``Uncoded``) registered by name;
+  new schemes are one dataclass + one ``register_scheme`` call.
+* ``planner``        — integerizes an ``AllocationPlan`` into a
+  per-worker ``DeploymentPlan``; plans carry their scheme object so
+  elastic re-planning preserves scheme parameters.
+* ``engine``         — ``CodedComputeEngine``, the facade owning the
+  ``ClusterSpec -> plan -> generator -> simulate / deadline -> replan``
+  lifecycle consumed by serving, fault tolerance and the benchmarks.
+* ``simulator``      — vectorized Monte-Carlo latency simulation;
+  per-scheme semantics dispatch through the scheme objects.
+* ``coding`` / ``coded_matvec`` / ``lambertw`` — real-valued MDS codes,
+  the end-to-end coded matvec, and the Lambert-W branch used by Thm 2.
 """
 from repro.core.allocation import (
     AllocationPlan,
@@ -12,23 +35,60 @@ from repro.core.allocation import (
     uniform_given_r,
     xi_star,
 )
+from repro.core.engine import CodedComputeEngine
 from repro.core.lambertw import lambertw0, lambertwm1
-from repro.core.planner import DeploymentPlan, plan_deployment, replan_on_membership_change
-from repro.core.runtime_model import ClusterSpec, GroupSpec, expected_order_stat, xi
+from repro.core.planner import (
+    DeploymentPlan,
+    deploy,
+    plan_deployment,
+    replan_on_membership_change,
+)
+from repro.core.runtime_model import (
+    ClusterSpec,
+    GroupSpec,
+    LatencyModel,
+    expected_order_stat,
+    xi,
+)
+from repro.core.schemes import (
+    AllocationScheme,
+    Optimal,
+    Reisizadeh,
+    Uncoded,
+    UniformN,
+    UniformR,
+    make_scheme,
+    register_scheme,
+    scheme_for_plan,
+    scheme_names,
+)
 
 __all__ = [
     "AllocationPlan",
+    "AllocationScheme",
     "ClusterSpec",
+    "CodedComputeEngine",
     "DeploymentPlan",
     "GroupSpec",
+    "LatencyModel",
+    "Optimal",
+    "Reisizadeh",
+    "Uncoded",
+    "UniformN",
+    "UniformR",
+    "deploy",
     "expected_order_stat",
     "lambertw0",
     "lambertwm1",
+    "make_scheme",
     "optimal_allocation",
     "optimal_r",
     "plan_deployment",
+    "register_scheme",
     "reisizadeh_allocation",
     "replan_on_membership_change",
+    "scheme_for_plan",
+    "scheme_names",
     "t_star",
     "uncoded",
     "uniform_given_n",

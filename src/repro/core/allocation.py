@@ -23,7 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lambertw import lambertwm1_neg_exp
-from repro.core.runtime_model import ClusterSpec, xi
+from repro.core.runtime_model import (
+    ClusterSpec,
+    LatencyModel,
+    resolve_latency_model,
+    xi,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +45,10 @@ class AllocationPlan:
       k: number of uncoded rows.
       t_star: the scheme's expected-latency value (lower bound for the
         optimal scheme; analytic expectation otherwise; NaN if unknown).
-      scheme: name tag.
+      scheme: name tag (derived from ``scheme_obj`` when one is attached).
+      scheme_obj: the typed ``AllocationScheme`` that produced this plan
+        (set by ``repro.core.schemes``; None for plans built by calling
+        the bare allocation functions below).
     """
 
     loads: np.ndarray
@@ -51,6 +59,7 @@ class AllocationPlan:
     k: int
     t_star: float
     scheme: str
+    scheme_obj: object | None = None
 
     @property
     def rate(self) -> float:
@@ -81,24 +90,39 @@ def xi_star(mu, alpha):
     return alpha + jnp.log(-_w_term(mu, alpha)) / mu
 
 
-def t_star(n_workers, mu, alpha, k: int | None = None, *, per_row: bool = False):
-    """Minimum expected latency T* (eq. (18)); T*_b (eq. (33)) if per_row."""
+def t_star(
+    n_workers,
+    mu,
+    alpha,
+    k: int | None = None,
+    *,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
+):
+    """Minimum expected latency T* (eq. (18)); T*_b (eq. (33)) for MODEL_30."""
+    model = resolve_latency_model(model, per_row)
     denom = jnp.sum(-mu * n_workers / _w_term(mu, alpha))
     t = 1.0 / denom
-    if per_row:
-        assert k is not None, "per-row model latency scales with k"
+    if model.per_row:
+        if k is None:
+            raise ValueError("per-row model (30) latency scales with k")
         t = t * k
     return t
 
 
 def optimal_allocation(
-    cluster: ClusterSpec, k: int, *, per_row: bool = False
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
 ) -> AllocationPlan:
-    """Theorem 2 (or Corollary 2 with per_row=True).
+    """Theorem 2 (or Corollary 2 under ``LatencyModel.MODEL_30``).
 
     Returns the optimal per-group loads l*_(j), the optimal (n*, k) MDS
     code, and the lower-bound latency T*.
     """
+    model = resolve_latency_model(model, per_row)
     n_w, mu, al = cluster.arrays()
     r = optimal_r(n_w, mu, al)
     xs = xi_star(mu, al)
@@ -107,7 +131,7 @@ def optimal_allocation(
     s = jnp.sum(r / xs)
     loads = k / (xs * s)
     n = jnp.sum(n_w * loads)
-    t = t_star(n_w, mu, al, k, per_row=per_row)
+    t = t_star(n_w, mu, al, k, model=model)
     loads_np = np.asarray(loads)
     loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
     return AllocationPlan(
@@ -118,7 +142,7 @@ def optimal_allocation(
         n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
         k=k,
         t_star=float(t),
-        scheme="optimal_per_row" if per_row else "optimal",
+        scheme="optimal_per_row" if model.per_row else "optimal",
     )
 
 

@@ -25,6 +25,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.coding import decode_from_rows, encode, make_generator
 from repro.core.planner import DeploymentPlan
 
+if hasattr(jax, "shard_map"):  # jax >= 0.6: top-level API, check_vma kwarg
+    _shard_map = jax.shard_map
+    _SHARD_MAP_NO_CHECK = {"check_vma": False}
+else:  # older jax: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_NO_CHECK = {"check_rep": False}
+
 
 def pack_coded_matrix(generator, a, plan: DeploymentPlan):
     """Encode A and pack per-worker blocks padded to max_load.
@@ -73,13 +81,13 @@ def coded_matvec(
         local = _local_matvec
 
     fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             lambda a_block, xv: local(a_block, xv),
             mesh=mesh,
             in_specs=(P(axis, None, None), P()),
             out_specs=P(axis, None),
             # pallas_call outputs carry no varying-mesh-axes metadata
-            check_vma=False,
+            **_SHARD_MAP_NO_CHECK,
         )
     )
     return fn(packed, x)

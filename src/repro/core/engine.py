@@ -1,0 +1,146 @@
+"""CodedComputeEngine: one object owning the coded-computation lifecycle.
+
+``ClusterSpec -> scheme -> AllocationPlan -> DeploymentPlan -> generator
+-> simulate / deadline / replan`` used to be five separate calls spread
+over the planner, coding, simulator and fault-tolerance modules, each
+re-threading the scheme name and its params. The engine bundles them:
+
+    eng = CodedComputeEngine(cluster, k=100_000, scheme="uniform_r",
+                             scheme_params={"r": 100})
+    eng.plan                    # integerized DeploymentPlan
+    eng.expected_latency(key)   # Monte-Carlo mean under the scheme's model
+    eng.deadline()              # finite per-round cutoff (MC fallback)
+    eng.generator()             # (n, k) MDS generator sized to the plan
+    eng.replan(new_cluster)     # elastic re-plan, scheme params preserved
+
+Consumed by the serving loop (coded LM head), the fault-tolerance layer
+(ElasticController), the launch drivers, and the paper-figure benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner
+from repro.core.allocation import AllocationPlan
+from repro.core.coding import make_generator
+from repro.core.runtime_model import ClusterSpec, LatencyModel
+from repro.core.schemes import AllocationScheme, make_scheme, scheme_for_plan
+
+
+def plan_deadline(
+    plan: "planner.DeploymentPlan",
+    safety: float = 3.0,
+    *,
+    key=None,
+    num_trials: int = 2_048,
+) -> float:
+    """Per-round cutoff for a deployment: expected latency x safety, finite.
+
+    The single deadline policy shared by ``CodedComputeEngine.deadline``
+    and the fault-tolerance layer's ``deadline_for``: the analytic T*
+    when the scheme has one; otherwise the scheme's own Monte-Carlo
+    latency estimate (uniform-n, reisizadeh, uncoded have NaN T*).
+    """
+    t = float(plan.t_star)
+    if not np.isfinite(t) or t <= 0:
+        scheme = scheme_for_plan(plan)
+        alloc = plan.allocation
+        if alloc is None:  # legacy plan: rebuild through the scheme
+            alloc = scheme.allocate(plan.cluster, plan.k)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        t = scheme.expected_latency(key, plan.cluster, alloc, num_trials)
+    return t * safety
+
+
+class CodedComputeEngine:
+    """Facade over plan -> deploy -> encode -> simulate for one workload."""
+
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        k: int,
+        scheme: str | AllocationScheme = "optimal",
+        *,
+        scheme_params: dict | None = None,
+    ):
+        if not isinstance(scheme, AllocationScheme):
+            scheme = make_scheme(scheme, **(scheme_params or {}))
+        elif scheme_params:
+            raise ValueError("scheme_params only apply to string scheme names")
+        self.scheme = scheme
+        self.k = int(k)
+        self.replans = 0
+        self._plan_for(cluster)
+
+    def _plan_for(self, cluster: ClusterSpec) -> None:
+        self.cluster = cluster
+        self.plan: planner.DeploymentPlan = planner.deploy(
+            self.scheme, cluster, self.k
+        )
+
+    # -- plan views --------------------------------------------------------
+    @property
+    def allocation(self) -> AllocationPlan:
+        """The underlying real-valued per-group allocation."""
+        return self.plan.allocation
+
+    @property
+    def t_star(self) -> float:
+        """The scheme's analytic expected latency (NaN when unknown)."""
+        return float(self.plan.t_star)
+
+    # -- coding ------------------------------------------------------------
+    def generator(self, key=None, kind: str = "systematic_gaussian"):
+        """(n, k) MDS generator sized to the deployed plan."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return make_generator(self.plan.n, self.k, key=key, kind=kind)
+
+    # -- evaluation --------------------------------------------------------
+    def simulate(
+        self,
+        key,
+        num_trials: int = 10_000,
+        *,
+        model: LatencyModel | None = None,
+        use_integer_loads: bool = False,
+    ):
+        """Monte-Carlo latency samples under the scheme's own semantics."""
+        return self.scheme.simulate(
+            key,
+            self.cluster,
+            self.allocation,
+            num_trials,
+            model=model,
+            use_integer_loads=use_integer_loads,
+        )
+
+    def expected_latency(
+        self, key, num_trials: int = 10_000, **kwargs
+    ) -> float:
+        return float(jnp.mean(self.simulate(key, num_trials, **kwargs)))
+
+    def deadline(
+        self,
+        safety: float = 3.0,
+        *,
+        key=None,
+        num_trials: int = 2_048,
+    ) -> float:
+        """Per-round cutoff: expected latency x safety factor, always finite.
+
+        See ``plan_deadline`` (shared with the fault-tolerance layer).
+        """
+        return plan_deadline(
+            self.plan, safety, key=key, num_trials=num_trials
+        )
+
+    # -- elasticity --------------------------------------------------------
+    def replan(self, new_cluster: ClusterSpec) -> planner.DeploymentPlan:
+        """Re-plan on a membership change; scheme params are preserved."""
+        self._plan_for(new_cluster)
+        self.replans += 1
+        return self.plan

@@ -1,10 +1,17 @@
 """Cluster planner: ClusterSpec -> deployable coded-computation plan.
 
-Bridges the paper's real-valued optimum (Theorem 2) and an executable
-assignment: integer per-worker row counts, generator size, worker->rows
-map, and re-planning hooks for elasticity (the closed-form solution makes
+Bridges a scheme's real-valued allocation and an executable assignment:
+integer per-worker row counts, generator size, worker->rows map, and
+re-planning hooks for elasticity (the closed-form solution makes
 re-planning O(G) — this is what makes the scheme practical at fleet
 scale: no iterative optimizer in the failure path).
+
+Scheme selection is object-based: ``deploy(scheme, cluster, k)`` takes a
+typed ``AllocationScheme`` from ``repro.core.schemes``; the plan carries
+the scheme object so ``replan_on_membership_change`` preserves every
+scheme parameter (n, r, latency model) across membership changes.
+``plan_deployment(scheme="optimal", ...)`` remains as a thin shim that
+resolves string names through the registry.
 """
 from __future__ import annotations
 
@@ -13,8 +20,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import allocation
-from repro.core.runtime_model import ClusterSpec
+from repro.core.allocation import AllocationPlan
+from repro.core.runtime_model import ClusterSpec, LatencyModel
+from repro.core.schemes import AllocationScheme, make_scheme, scheme_for_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +37,8 @@ class DeploymentPlan:
     n: int  # total coded rows actually deployed
     t_star: float  # paper lower bound for the underlying real plan
     scheme: str
+    scheme_obj: AllocationScheme | None = None
+    allocation: AllocationPlan | None = None  # underlying real-valued plan
 
     @property
     def num_workers(self) -> int:
@@ -51,30 +61,8 @@ def _expand(cluster: ClusterSpec, per_group: Sequence[int]):
     return np.asarray(loads, dtype=np.int64), np.asarray(gid, dtype=np.int64)
 
 
-def plan_deployment(
-    cluster: ClusterSpec,
-    k: int,
-    *,
-    scheme: str = "optimal",
-    per_row: bool = False,
-    n: float | None = None,
-    r: int | None = None,
-) -> DeploymentPlan:
-    """Compute an integerized deployment plan for the requested scheme."""
-    if scheme == "optimal":
-        plan = allocation.optimal_allocation(cluster, k, per_row=per_row)
-    elif scheme == "uniform_n":
-        assert n is not None
-        plan = allocation.uniform_given_n(cluster, k, n)
-    elif scheme == "uniform_r":
-        assert r is not None
-        plan = allocation.uniform_given_r(cluster, k, r)
-    elif scheme == "reisizadeh":
-        plan = allocation.reisizadeh_allocation(cluster, k)
-    elif scheme == "uncoded":
-        plan = allocation.uncoded(cluster, k)
-    else:
-        raise ValueError(f"unknown scheme {scheme}")
+def integerize(cluster: ClusterSpec, plan: AllocationPlan) -> DeploymentPlan:
+    """Expand a per-group AllocationPlan into a per-worker DeploymentPlan."""
     loads_w, gid = _expand(cluster, plan.loads_int)
     starts = np.concatenate([[0], np.cumsum(loads_w)[:-1]])
     ranges = tuple(
@@ -82,27 +70,57 @@ def plan_deployment(
     )
     return DeploymentPlan(
         cluster=cluster,
-        k=k,
+        k=plan.k,
         loads_per_worker=loads_w,
         group_of_worker=gid,
         row_ranges=ranges,
         n=int(loads_w.sum()),
         t_star=plan.t_star,
         scheme=plan.scheme,
+        scheme_obj=plan.scheme_obj,
+        allocation=plan,
     )
+
+
+def deploy(
+    scheme: AllocationScheme, cluster: ClusterSpec, k: int
+) -> DeploymentPlan:
+    """Allocate with a typed scheme and integerize for deployment."""
+    return integerize(cluster, scheme.allocate(cluster, k))
+
+
+def plan_deployment(
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    scheme: str | AllocationScheme = "optimal",
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
+    n: float | None = None,
+    r: int | None = None,
+) -> DeploymentPlan:
+    """Compute an integerized deployment plan for the requested scheme.
+
+    Deprecation shim: string names (plus the legacy per_row/n/r params)
+    are resolved through the scheme registry; prefer passing an
+    ``AllocationScheme`` object (or calling ``deploy``) directly.
+    """
+    if not isinstance(scheme, AllocationScheme):
+        scheme = make_scheme(scheme, per_row=per_row, model=model, n=n, r=r)
+    return deploy(scheme, cluster, k)
 
 
 def replan_on_membership_change(
     plan: DeploymentPlan, new_cluster: ClusterSpec
 ) -> DeploymentPlan:
-    """Elastic re-planning: closed-form Theorem 2 on the new membership.
+    """Elastic re-planning: the plan's scheme on the new membership.
 
     Called by the fault-tolerance layer when workers join/leave or when
-    online mu estimates are refreshed. O(G) cost.
+    online mu estimates are refreshed. O(G) cost. The scheme object rides
+    on the plan, so scheme parameters (n, r, latency model) survive the
+    re-plan for every scheme — not just the optimal one.
     """
-    scheme = "optimal" if plan.scheme.startswith("optimal") else plan.scheme
-    per_row = plan.scheme == "optimal_per_row"
-    return plan_deployment(new_cluster, plan.k, scheme=scheme, per_row=per_row)
+    return deploy(scheme_for_plan(plan), new_cluster, plan.k)
 
 
 def estimate_mu_online(samples_per_group: Sequence[np.ndarray], k: int, loads):

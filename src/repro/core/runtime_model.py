@@ -31,11 +31,52 @@ are provided.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class LatencyModel(enum.Enum):
+    """Which shifted-exponential runtime model the math runs under.
+
+    ``MODEL_1`` is the paper's main model (1): round-trip time scales with
+    ``l/k`` (normalized by problem size). ``MODEL_30`` is the per-row model
+    (30) of Section III-E / [32]: time scales with ``l`` directly. This enum
+    replaces the ``per_row`` boolean that used to be threaded through every
+    layer; the old keyword is still accepted as a deprecated alias.
+    """
+
+    MODEL_1 = "model_1"
+    MODEL_30 = "model_30"
+
+    @property
+    def per_row(self) -> bool:
+        """Legacy flag view: True iff this is the per-row model (30)."""
+        return self is LatencyModel.MODEL_30
+
+    @classmethod
+    def from_per_row(cls, per_row: bool) -> "LatencyModel":
+        return cls.MODEL_30 if per_row else cls.MODEL_1
+
+
+def resolve_latency_model(
+    model: "LatencyModel | str | None",
+    per_row: bool | None = None,
+    default: "LatencyModel | None" = LatencyModel.MODEL_1,
+) -> "LatencyModel | None":
+    """Collapse the (model, legacy per_row flag) pair into one LatencyModel.
+
+    ``model`` wins when given; otherwise an explicit ``per_row`` flag is
+    honoured; otherwise ``default``.
+    """
+    if model is not None:
+        return model if isinstance(model, LatencyModel) else LatencyModel(model)
+    if per_row is not None:
+        return LatencyModel.from_per_row(per_row)
+    return default
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +155,8 @@ def expected_order_stat(
     alpha,
     k,
     *,
-    per_row: bool = False,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
     exact_harmonic: bool = False,
 ):
     """lambda^{l}_{r:N} — expected r-th order statistic (paper eq. (6)).
@@ -122,11 +164,12 @@ def expected_order_stat(
     With ``exact_harmonic`` uses H_N - H_{N-r}; otherwise the paper's
     log(N/(N-r)) approximation.
     """
+    model = resolve_latency_model(model, per_row)
     if exact_harmonic:
         tail = (harmonic(n_workers) - harmonic(n_workers - r)) / mu
     else:
         tail = jnp.log(n_workers / (n_workers - r)) / mu
-    scale = load if per_row else load / k
+    scale = load if model.per_row else load / k
     return scale * (alpha + tail)
 
 
@@ -138,7 +181,8 @@ def sample_worker_times(
     k,
     num_trials: int,
     *,
-    per_row: bool = False,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
     dtype=jnp.float32,
 ):
     """Sample (num_trials, N) round-trip times under model (1) or (30).
@@ -146,11 +190,12 @@ def sample_worker_times(
     ``loads_per_worker`` etc. are length-N arrays (already expanded from
     groups). Returns times with shape (num_trials, N).
     """
+    model = resolve_latency_model(model, per_row)
     l = jnp.asarray(loads_per_worker, dtype=dtype)
     mu = jnp.asarray(mus_per_worker, dtype=dtype)
     al = jnp.asarray(alphas_per_worker, dtype=dtype)
     e = jax.random.exponential(key, (num_trials, l.shape[0]), dtype=dtype)
-    if per_row:
+    if model.per_row:
         return al * l + (l / mu) * e
     return al * l / k + (l / (k * mu)) * e
 

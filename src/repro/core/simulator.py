@@ -10,6 +10,11 @@ the first crossing of ``k``.
 
 Also provides the group-code semantics of [33] (per-group (N_j, r_j) MDS
 codes: latency = max_j of the r_j-th order statistic within group j).
+
+Scheme dispatch lives in ``repro.core.schemes``: ``expected_latency``
+resolves the plan's ``AllocationScheme`` object and calls its
+``simulate`` method, so new schemes bring their own simulation semantics
+without this module growing per-scheme branches.
 """
 from __future__ import annotations
 
@@ -20,17 +25,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocation import AllocationPlan
-from repro.core.runtime_model import ClusterSpec, expand_groups, sample_worker_times
+from repro.core.runtime_model import (
+    ClusterSpec,
+    LatencyModel,
+    expand_groups,
+    resolve_latency_model,
+    sample_worker_times,
+)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_trials", "per_row", "k")
+    jax.jit, static_argnames=("num_trials", "model", "k")
 )
 def _threshold_latency(
-    key, loads_w, mus_w, alphas_w, k, num_trials, per_row
+    key, loads_w, mus_w, alphas_w, k, num_trials, model
 ):
     times = sample_worker_times(
-        key, loads_w, mus_w, alphas_w, k, num_trials, per_row=per_row
+        key, loads_w, mus_w, alphas_w, k, num_trials, model=model
     )
     order = jnp.argsort(times, axis=1)
     sorted_times = jnp.take_along_axis(times, order, axis=1)
@@ -52,9 +63,11 @@ def simulate_threshold(
     k: int,
     num_trials: int = 10_000,
     *,
-    per_row: bool = False,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
 ):
     """Latency samples for 'collect until k coded rows' (paper's master)."""
+    model = resolve_latency_model(model, per_row)
     loads_w = expand_groups(cluster, loads_per_group)
     mus_w = expand_groups(cluster, [g.mu for g in cluster.groups])
     alphas_w = expand_groups(cluster, [g.alpha for g in cluster.groups])
@@ -65,7 +78,7 @@ def simulate_threshold(
         alphas_w.astype(jnp.float32),
         k,
         num_trials,
-        per_row,
+        model,
     )
 
 
@@ -77,7 +90,8 @@ def simulate_group_code(
     k: int,
     num_trials: int = 10_000,
     *,
-    per_row: bool = False,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
 ):
     """Latency samples for the [33] group-code scheme.
 
@@ -85,6 +99,7 @@ def simulate_group_code(
     loads; the master must decode every group, so the latency is the max
     over groups of the r_j-th order statistic.
     """
+    model = resolve_latency_model(model, per_row)
     keys = jax.random.split(key, cluster.num_groups)
     lat = jnp.zeros((num_trials,))
     for j, g in enumerate(cluster.groups):
@@ -97,7 +112,7 @@ def simulate_group_code(
             jnp.full((g.num_workers,), g.alpha, dtype=jnp.float32),
             k,
             num_trials,
-            per_row=per_row,
+            model=model,
         )
         tj = jnp.sort(t, axis=1)[:, r_j - 1]
         lat = jnp.maximum(lat, tj)
@@ -110,17 +125,27 @@ def expected_latency(
     plan: AllocationPlan,
     num_trials: int = 10_000,
     *,
-    per_row: bool = False,
+    per_row: bool | None = None,
+    model: LatencyModel | None = None,
     use_integer_loads: bool = False,
 ) -> float:
-    """Mean Monte-Carlo latency of an AllocationPlan under a cluster."""
-    loads = plan.loads_int if use_integer_loads else plan.loads
-    if plan.scheme == "uniform_r_group_code":
-        lat = simulate_group_code(
-            key, cluster, float(loads[0]), plan.r, plan.k, num_trials, per_row=per_row
-        )
-    else:
-        lat = simulate_threshold(
-            key, cluster, loads, plan.k, num_trials, per_row=per_row
-        )
+    """Mean Monte-Carlo latency of an AllocationPlan under a cluster.
+
+    Simulation semantics come from the plan's scheme object (threshold
+    decoding by default; per-group order statistics for the group code),
+    and the latency model defaults to the scheme's own unless overridden
+    via ``model`` (or the legacy ``per_row`` flag).
+    """
+    from repro.core.schemes import scheme_for_plan  # deferred: schemes uses us
+
+    scheme = scheme_for_plan(plan)
+    model = resolve_latency_model(model, per_row, default=None)
+    lat = scheme.simulate(
+        key,
+        cluster,
+        plan,
+        num_trials,
+        model=model,
+        use_integer_loads=use_integer_loads,
+    )
     return float(jnp.mean(lat))

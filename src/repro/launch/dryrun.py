@@ -19,9 +19,12 @@ import numpy as np  # noqa: E402
 
 from repro.configs import ARCHS, SHAPES_BY_NAME, get_arch, shapes_for  # noqa: E402
 from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.core.engine import CodedComputeEngine  # noqa: E402
+from repro.core.runtime_model import ClusterSpec  # noqa: E402
+from repro.core.schemes import make_scheme, scheme_names  # noqa: E402
 from repro.data.pipeline import make_batch_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models.model import Model  # noqa: E402
+from repro.models.model import Model, padded_vocab  # noqa: E402
 from repro.optim import AdamWConfig, adamw_init  # noqa: E402
 from repro.runtime.train_loop import make_train_step_fn  # noqa: E402
 from repro.sharding import (  # noqa: E402
@@ -141,6 +144,38 @@ def analytic_inner_costs(config: ModelConfig, shape: ShapeConfig) -> dict:
         flops += n_m * 4.0 * b * s * d_in * hd_x
         flops += n_s * 8.0 * b * s * c.d_model * (c.d_model // c.num_heads)
     return {"flops": flops * train_mult, "bytes": byts * train_mult}
+
+
+def coded_head_record(config: ModelConfig, cluster: ClusterSpec, *,
+                      scheme="optimal", block_rows: int = 256) -> dict:
+    """Closed-form coded-LM-head deployment stats for one arch (no compile).
+
+    Uses the same ``CodedComputeEngine`` path the serving loop deploys:
+    kb vocab blocks of ``block_rows`` rows (ceil, matching CodedLMHead),
+    MDS-coded over the cluster under the requested registered scheme
+    (name or AllocationScheme object).
+    """
+    kb = -(-padded_vocab(config.vocab_size) // block_rows)
+    eng = CodedComputeEngine(cluster, kb, scheme)
+    return {
+        "scheme": eng.plan.scheme,
+        "block_rows": block_rows,
+        "kb": kb,
+        "nb": eng.plan.n,
+        "rate": eng.plan.rate,
+        "workers": eng.plan.num_workers,
+        "max_blocks_per_worker": eng.plan.max_load,
+        "t_star": eng.t_star,
+        "deadline": eng.deadline(),
+    }
+
+
+def _parse_cluster(groups: str) -> ClusterSpec:
+    """'6:2.0,6:0.5' -> ClusterSpec (same syntax as launch/serve.py)."""
+    pairs = [p.split(":") for p in groups.split(",")]
+    return ClusterSpec.make(
+        [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
+    )
 
 
 def model_flops(config: ModelConfig, shape: ShapeConfig) -> float:
@@ -291,6 +326,8 @@ def dryrun_cell(config: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
     compile_s = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x wraps the dict in a list
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_rec = {
@@ -483,7 +520,25 @@ def main():
     ap.add_argument("--roofline", action="store_true",
                     help="use the per-layer finite-difference method for "
                          "accurate roofline terms (see roofline_cell)")
+    ap.add_argument("--coded-groups", default=None,
+                    help="N:mu worker groups; attaches the coded-LM-head "
+                         "deployment record (CodedComputeEngine) to every "
+                         "decode cell")
+    ap.add_argument("--coded-scheme", default="optimal",
+                    choices=scheme_names(),
+                    help="registered allocation scheme for --coded-groups")
+    ap.add_argument("--coded-n", type=float, default=None,
+                    help="code size n for --coded-scheme uniform_n")
+    ap.add_argument("--coded-r", type=int, default=None,
+                    help="completion count r for --coded-scheme uniform_r")
     args = ap.parse_args()
+    # resolve cluster + scheme up front so bad params fail before any compile
+    coded_cluster = _parse_cluster(args.coded_groups) if args.coded_groups else None
+    coded_scheme = (
+        make_scheme(args.coded_scheme, n=args.coded_n, r=args.coded_r)
+        if coded_cluster is not None
+        else None
+    )
 
     os.makedirs(args.out, exist_ok=True)
     archs = [get_arch(args.arch)] if args.arch else list(ARCHS.values())
@@ -508,6 +563,10 @@ def main():
                     else:
                         rec = dryrun_cell(cfg, shape, multi_pod=mp,
                                           scan_layers=args.scan_layers)
+                    if coded_cluster is not None and shape.kind == "decode":
+                        rec["coded_lm_head"] = coded_head_record(
+                            cfg, coded_cluster, scheme=coded_scheme
+                        )
                     with open(os.path.join(args.out, tag + ".json"), "w") as f:
                         json.dump(rec, f, indent=1)
                 except Exception as e:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import make_scheme, scheme_names
 from repro.data.pipeline import make_extras
 from repro.models.model import Model
 from repro.runtime.serve_loop import ServeConfig, Server
@@ -33,6 +34,12 @@ def main():
                     help="serve logits through the coded LM head")
     ap.add_argument("--groups", default="6:2.0,6:0.5",
                     help="heterogeneous fleet as N:mu pairs")
+    ap.add_argument("--scheme", default="optimal", choices=scheme_names(),
+                    help="registered allocation scheme for the coded head")
+    ap.add_argument("--scheme-n", type=float, default=None,
+                    help="code size n for --scheme uniform_n")
+    ap.add_argument("--scheme-r", type=int, default=None,
+                    help="completion count r for --scheme uniform_r")
     args = ap.parse_args()
 
     config = get_arch(args.arch)
@@ -42,15 +49,20 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0))
 
     cluster = None
+    scheme = make_scheme(args.scheme, n=args.scheme_n, r=args.scheme_r)
     if args.coded:
         pairs = [p.split(":") for p in args.groups.split(",")]
         cluster = ClusterSpec.make(
             [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
         )
-    server = Server(model, params, cluster, ServeConfig(max_decode_steps=args.max_new))
+    server = Server(
+        model, params, cluster,
+        ServeConfig(max_decode_steps=args.max_new, scheme=scheme),
+    )
     if server.coded_head is not None:
         h = server.coded_head
-        print(f"coded LM head: kb={h.kb} blocks x {h.block_rows} rows, "
+        print(f"coded LM head [{h.plan.scheme}]: "
+              f"kb={h.kb} blocks x {h.block_rows} rows, "
               f"(n,k)=({h.nb},{h.kb}) rate={h.kb/h.nb:.3f}, "
               f"loads/worker={h.plan.loads_per_worker.tolist()}, "
               f"deadline={h.deadline:.4f}")

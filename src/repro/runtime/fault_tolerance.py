@@ -9,10 +9,14 @@ the fleet-control pieces around it:
   forgetting) and deadline-based failure detection.
 * ``ElasticController`` — membership changes (workers join/leave, groups
   added on scale-up) trigger a closed-form re-plan (Theorem 2 is O(G) —
-  no iterative optimizer in the failure path).
-* ``deadline_for`` — converts the planner's expected-latency lower bound
-  into an actionable per-round deadline (T* x safety factor): workers
-  that miss it are erasures for the MDS decode.
+  no iterative optimizer in the failure path). Backed by a
+  ``CodedComputeEngine``, so any registered ``AllocationScheme`` (with
+  its params) survives every re-plan.
+* ``deadline_for`` — converts a plan's expected latency into an
+  actionable per-round deadline (latency x safety factor): workers that
+  miss it are erasures for the MDS decode. Schemes without an analytic
+  T* (uniform-n, reisizadeh, uncoded) get a Monte-Carlo estimate, so the
+  deadline is finite for every registered scheme.
 """
 from __future__ import annotations
 
@@ -20,13 +24,27 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.planner import DeploymentPlan, plan_deployment, replan_on_membership_change
+from repro.core.engine import CodedComputeEngine, plan_deadline
+from repro.core.planner import DeploymentPlan
 from repro.core.runtime_model import ClusterSpec, GroupSpec
+from repro.core.schemes import AllocationScheme
 
 
-def deadline_for(plan: DeploymentPlan, safety: float = 3.0) -> float:
-    """Per-round cutoff: T* (expected optimum) times a safety factor."""
-    return float(plan.t_star) * safety
+def deadline_for(
+    plan: DeploymentPlan,
+    safety: float = 3.0,
+    *,
+    key=None,
+    num_trials: int = 2_048,
+) -> float:
+    """Per-round cutoff: expected latency times a safety factor.
+
+    Uses the plan's analytic T* when finite; otherwise falls back to the
+    scheme's own Monte-Carlo latency estimate so that uniform-n /
+    reisizadeh / uncoded deployments still get a usable deadline. Thin
+    alias of ``repro.core.engine.plan_deadline`` (one deadline policy).
+    """
+    return plan_deadline(plan, safety, key=key, num_trials=num_trials)
 
 
 @dataclasses.dataclass
@@ -95,20 +113,36 @@ class StragglerTracker:
 class ElasticController:
     """Re-plans the coded deployment when the fleet changes.
 
-    The plan is recomputed from Theorem 2's closed form — re-planning is
+    The plan is recomputed from the scheme's closed form — re-planning is
     O(G) and happens inline (no coordinator round trip), which is what
-    makes elasticity practical at 1000+ workers.
+    makes elasticity practical at 1000+ workers. Thin wrapper over
+    ``CodedComputeEngine.replan``; scheme params travel with the engine's
+    typed scheme object across every membership change.
     """
 
-    def __init__(self, cluster: ClusterSpec, k: int, *, scheme: str = "optimal"):
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        k: int,
+        *,
+        scheme: str | AllocationScheme = "optimal",
+        scheme_params: dict | None = None,
+    ):
         self.k = k
-        self.plan = plan_deployment(cluster, k, scheme=scheme)
-        self.replans = 0
+        self.engine = CodedComputeEngine(
+            cluster, k, scheme, scheme_params=scheme_params
+        )
+
+    @property
+    def plan(self) -> DeploymentPlan:
+        return self.engine.plan
+
+    @property
+    def replans(self) -> int:
+        return self.engine.replans
 
     def on_membership_change(self, new_cluster: ClusterSpec) -> DeploymentPlan:
-        self.plan = replan_on_membership_change(self.plan, new_cluster)
-        self.replans += 1
-        return self.plan
+        return self.engine.replan(new_cluster)
 
     def on_estimates_update(self, tracker: StragglerTracker) -> DeploymentPlan:
         return self.on_membership_change(tracker.estimated_cluster())

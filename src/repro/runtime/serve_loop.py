@@ -12,8 +12,10 @@ paper's load allocation, in block units) and returns the (R,)-per-block
 products ``E~_i h``. Any ``kb`` coded block-products reconstruct all
 logits — workers missing the deadline (T* x safety) are erasures.
 
-Planner integration: ``ClusterSpec -> plan_deployment(k=kb)`` so the
-per-worker block counts follow Theorem 2 exactly.
+Engine integration: ``ClusterSpec -> CodedComputeEngine(k=kb)`` owns the
+plan, the (nb, kb) generator and the deadline, so the per-worker block
+counts follow the configured ``AllocationScheme`` (Theorem 2 by default;
+any registered scheme via ``ServeConfig.scheme``).
 """
 from __future__ import annotations
 
@@ -23,11 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coding import make_generator
-from repro.core.planner import DeploymentPlan, plan_deployment
+from repro.core.engine import CodedComputeEngine
+from repro.core.planner import DeploymentPlan
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import AllocationScheme
 from repro.models.model import Model, padded_vocab
-from repro.runtime.fault_tolerance import deadline_for
 
 
 @dataclasses.dataclass
@@ -35,22 +37,23 @@ class ServeConfig:
     block_rows: int = 256  # R: vocab rows per MDS block
     deadline_safety: float = 3.0
     max_decode_steps: int = 32
+    scheme: str | AllocationScheme = "optimal"  # registry name or object
 
 
 class CodedLMHead:
     """MDS-coded unembedding for straggler-tolerant decode."""
 
     def __init__(self, embed_table, cluster: ClusterSpec, *, block_rows: int = 256,
-                 key=None):
+                 key=None, scheme: str | AllocationScheme = "optimal",
+                 deadline_safety: float = 3.0):
         self.table = np.asarray(embed_table, np.float32)  # (Vp, D)
         vp, d = self.table.shape
         self.block_rows = block_rows
         self.kb = -(-vp // block_rows)  # blocks needed to cover the vocab
-        self.plan: DeploymentPlan = plan_deployment(cluster, self.kb, scheme="optimal")
+        self.engine = CodedComputeEngine(cluster, self.kb, scheme)
+        self.plan: DeploymentPlan = self.engine.plan
         self.nb = self.plan.n
-        self.generator = np.asarray(
-            make_generator(self.nb, self.kb, key=key or jax.random.PRNGKey(0))
-        )
+        self.generator = np.asarray(self.engine.generator(key=key))
         # coded blocks: (nb, R, D) = einsum over the block-reshaped table
         pad = self.kb * block_rows - vp
         tbl = np.pad(self.table, ((0, pad), (0, 0)))
@@ -58,7 +61,7 @@ class CodedLMHead:
         self.coded = jnp.asarray(
             np.einsum("nk,krd->nrd", self.generator, blocks, optimize=True)
         )
-        self.deadline = deadline_for(self.plan)
+        self.deadline = self.engine.deadline(deadline_safety)
         self._rows_of_worker = self.plan.row_ranges  # block ranges per worker
 
     def worker_products(self, h):
@@ -112,7 +115,10 @@ class Server:
         self.cfg = cfg or ServeConfig()
         self.coded_head = (
             CodedLMHead(
-                params["embed"]["table"], cluster, block_rows=self.cfg.block_rows
+                params["embed"]["table"], cluster,
+                block_rows=self.cfg.block_rows,
+                scheme=self.cfg.scheme,
+                deadline_safety=self.cfg.deadline_safety,
             )
             if cluster is not None
             else None

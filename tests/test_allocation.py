@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from scipy.special import lambertw as scipy_lambertw
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ClusterSpec,

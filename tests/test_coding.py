@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
+from _hypothesis_compat import given, settings, st
 from repro.core import ClusterSpec, plan_deployment
 from repro.core.coding import (
     decode_from_rows,

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
 from repro.kernels.coded_matvec.ops import blocked_matvec, blocked_matvec_batch
 from repro.kernels.coded_matvec.ref import matvec_batch_ref, matvec_ref
 from repro.kernels.mds_encode.ops import mds_encode

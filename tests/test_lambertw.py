@@ -2,8 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from scipy.special import lambertw as scipy_lambertw
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lambertw import lambertw0, lambertwm1
 

@@ -1,0 +1,205 @@
+"""Scheme registry, engine facade, elastic replan, and deadline tests.
+
+Covers the ISSUE-1 acceptance criteria: every registered scheme
+round-trips name -> object -> allocate -> simulate; integer loads always
+cover k; replanning preserves scheme params for every scheme; deadlines
+are finite and positive for every scheme (including those with NaN T*).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    CodedComputeEngine,
+    LatencyModel,
+    Optimal,
+    Reisizadeh,
+    Uncoded,
+    UniformN,
+    UniformR,
+    make_scheme,
+    plan_deployment,
+    replan_on_membership_change,
+    scheme_for_plan,
+    scheme_names,
+)
+from repro.core.planner import deploy
+from repro.runtime.fault_tolerance import deadline_for
+
+KEY = jax.random.PRNGKey(0)
+K = 512
+
+# params needed to instantiate each registry name on the test cluster
+PARAMS = {
+    "uniform_n": {"n": 700.0},
+    "uniform_r": {"r": 8},
+    "uniform_r_group_code": {"r": 8},
+}
+
+
+def cluster3() -> ClusterSpec:
+    return ClusterSpec.make([6, 10, 8], [4.0, 1.0, 0.4], 1.0)
+
+
+def all_schemes():
+    return [make_scheme(name, **PARAMS.get(name, {})) for name in scheme_names()]
+
+
+# ------------------------------------------------------------- registry
+def test_every_name_round_trips_allocate_simulate():
+    """name -> object -> allocate -> simulate on a 3-group cluster."""
+    c = cluster3()
+    for name in scheme_names():
+        scheme = make_scheme(name, **PARAMS.get(name, {}))
+        plan = scheme.allocate(c, K)
+        assert plan.scheme_obj is scheme
+        assert plan.k == K
+        assert np.all(plan.loads > 0)
+        # integer loads always cover k rows
+        assert plan.n_int >= K, f"{name}: n_int={plan.n_int} < k={K}"
+        lat = scheme.simulate(KEY, c, plan, num_trials=500)
+        lat = np.asarray(lat)
+        assert lat.shape == (500,)
+        assert np.all(np.isfinite(lat)) and np.all(lat > 0), name
+
+
+def test_unknown_scheme_name_rejected():
+    with pytest.raises(ValueError, match="unknown scheme"):
+        make_scheme("no_such_scheme")
+
+
+def test_missing_params_rejected():
+    with pytest.raises(ValueError, match="uniform_n"):
+        make_scheme("uniform_n")
+    with pytest.raises(ValueError, match="uniform_r"):
+        make_scheme("uniform_r")
+    with pytest.raises(ValueError):
+        UniformN(n=-3.0)
+    with pytest.raises(ValueError):
+        UniformR(r=0)
+
+
+def test_schemes_are_frozen_value_objects():
+    assert UniformR(r=8) == UniformR(r=8)
+    assert UniformR(r=8) != UniformR(r=9)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        UniformR(r=8).r = 9
+
+
+def test_legacy_string_shim_matches_objects():
+    """plan_deployment(scheme=<str>) == deploy(<object>) for all schemes."""
+    c = cluster3()
+    pairs = [
+        (dict(scheme="optimal"), Optimal()),
+        (dict(scheme="optimal", per_row=True), Optimal(LatencyModel.MODEL_30)),
+        (dict(scheme="uniform_n", n=700.0), UniformN(n=700.0)),
+        (dict(scheme="uniform_r", r=8), UniformR(r=8)),
+        (dict(scheme="reisizadeh"), Reisizadeh()),
+        (dict(scheme="uncoded"), Uncoded()),
+    ]
+    for kwargs, obj in pairs:
+        old = plan_deployment(c, K, **kwargs)
+        new = deploy(obj, c, K)
+        assert old.scheme == new.scheme
+        np.testing.assert_array_equal(old.loads_per_worker, new.loads_per_worker)
+        assert old.scheme_obj == obj
+
+
+# -------------------------------------------------------------- replan
+def test_replan_preserves_params_for_every_scheme():
+    """Regression: replanning used to crash for uniform_n/uniform_r
+    (params dropped, bare assert) and string-match on 'optimal*'."""
+    c = cluster3()
+    c2 = ClusterSpec.make([6, 5, 8], [4.0, 1.0, 0.4], 1.0)  # group 2 shrank
+    for scheme in all_schemes():
+        plan = deploy(scheme, c, K)
+        plan2 = replan_on_membership_change(plan, c2)
+        assert plan2.scheme_obj == scheme, plan.scheme
+        assert plan2.scheme == plan.scheme
+        assert plan2.num_workers == c2.total_workers
+        assert plan2.n >= K or plan.scheme == "uncoded"
+        # uniform_n keeps its code size; uniform_r keeps its r
+        if isinstance(scheme, UniformN):
+            assert plan2.allocation.n == pytest.approx(scheme.n)
+        if isinstance(scheme, UniformR):
+            np.testing.assert_allclose(
+                plan2.allocation.loads, K / scheme.r, rtol=1e-12
+            )
+
+
+def test_replan_per_row_model_survives():
+    c = cluster3()
+    plan = deploy(Optimal(LatencyModel.MODEL_30), c, K)
+    assert plan.scheme == "optimal_per_row"
+    plan2 = replan_on_membership_change(plan, ClusterSpec.make([6, 10], [4.0, 1.0]))
+    assert plan2.scheme == "optimal_per_row"
+    assert plan2.scheme_obj.latency_model is LatencyModel.MODEL_30
+
+
+def test_scheme_for_plan_reconstructs_legacy_plans():
+    """Plans built from the bare allocation functions still resolve."""
+    from repro.core import allocation
+
+    c = cluster3()
+    for plan, expect in [
+        (allocation.optimal_allocation(c, K), Optimal()),
+        (allocation.uniform_given_n(c, K, 700.0), UniformN(n=700.0)),
+        (allocation.uniform_given_r(c, K, 8), UniformR(r=8)),
+        (allocation.reisizadeh_allocation(c, K), Reisizadeh()),
+        (allocation.uncoded(c, K), Uncoded()),
+    ]:
+        assert plan.scheme_obj is None
+        got = scheme_for_plan(plan)
+        assert type(got) is type(expect)
+        if isinstance(expect, UniformR):
+            assert got.r == expect.r
+
+
+def test_scheme_for_plan_prefers_exact_allocation_over_integer_loads():
+    """Integerized loads round (66.67 -> 67); reconstruction must use the
+    attached real-valued allocation so r does not drift (150 -> 149)."""
+    from repro.core import allocation
+    from repro.core.planner import integerize
+
+    c = ClusterSpec.make([100, 200, 100], [4.0, 1.0, 0.4], 1.0)
+    dep = integerize(c, allocation.uniform_given_r(c, 10_000, 150))
+    assert dep.scheme_obj is None  # legacy-style plan
+    got = scheme_for_plan(dep)
+    assert got == UniformR(r=150)
+
+
+# -------------------------------------------------------------- engine
+def test_engine_lifecycle():
+    c = cluster3()
+    eng = CodedComputeEngine(c, K, "uniform_r", scheme_params={"r": 8})
+    assert eng.plan.scheme == "uniform_r_group_code"
+    g = np.asarray(eng.generator())
+    assert g.shape == (eng.plan.n, K)
+    lat = eng.expected_latency(KEY, num_trials=500)
+    assert np.isfinite(lat) and lat > 0
+    c2 = ClusterSpec.make([6, 10], [4.0, 1.0], 1.0)
+    plan2 = eng.replan(c2)
+    assert eng.replans == 1
+    assert plan2.num_workers == 16
+    assert plan2.scheme == "uniform_r_group_code"  # r preserved
+
+
+def test_engine_rejects_params_with_object_scheme():
+    with pytest.raises(ValueError):
+        CodedComputeEngine(cluster3(), K, Uncoded(), scheme_params={"r": 3})
+
+
+# ------------------------------------------------------------ deadlines
+def test_deadline_finite_positive_for_all_schemes():
+    """Schemes with NaN T* (uniform_n, reisizadeh, uncoded) fall back to
+    a Monte-Carlo estimate instead of returning NaN."""
+    c = cluster3()
+    for scheme in all_schemes():
+        plan = deploy(scheme, c, K)
+        d = deadline_for(plan, num_trials=500)
+        assert np.isfinite(d) and d > 0, plan.scheme
+        d_eng = CodedComputeEngine(c, K, scheme).deadline(num_trials=500)
+        assert np.isfinite(d_eng) and d_eng > 0, plan.scheme
