@@ -7,7 +7,18 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import fig2, fig3, fig4, fig5, fig6, fig7, fig8, fig9, roofline
+from benchmarks import (
+    fig2,
+    fig3,
+    fig4,
+    fig5,
+    fig6,
+    fig7,
+    fig8,
+    fig9,
+    roofline,
+    serve_throughput,
+)
 
 
 def main():
@@ -18,7 +29,7 @@ def main():
     mods = {
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
-        "roofline": roofline,
+        "roofline": roofline, "serve_throughput": serve_throughput,
     }
     names = args.only.split(",") if args.only else list(mods)
     for name in names:

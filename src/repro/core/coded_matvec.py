@@ -12,6 +12,12 @@ blocks PADDED to ``max_load`` rows so the array shards evenly over the
 device its block; the local product is one matvec (the Pallas kernel in
 ``repro/kernels/coded_matvec`` is the TPU-tiled version, selectable with
 ``use_kernel=True``); results are all-gathered and decoded.
+
+The hot path is ``DecodePipeline``: matvec, erasure-mask application and
+the fixed-shape decode fused into ONE jitted master step, so a coded
+round never round-trips through the host (DESIGN.md §4). The split
+``coded_matvec`` / ``decode_coded_result`` pair remains as the host-side
+reference path.
 """
 from __future__ import annotations
 
@@ -22,7 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.coding import decode_from_rows, encode, make_generator
+from repro.core.coding import (
+    decode_from_rows,
+    decode_systematic_jit,
+    encode,
+    make_generator,
+)
 from repro.core.planner import DeploymentPlan
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6: top-level API, check_vma kwarg
@@ -120,6 +131,84 @@ def decode_coded_result(
     return z, True
 
 
+def masked_decode(generator, row_of, partials, finished_workers):
+    """Fuse erasure-mask application + decode, entirely on-device.
+
+    Scatters the packed per-slot products into coded-row order (pad slots
+    and straggler workers dropped via out-of-bounds indices), marks the
+    surviving rows, and runs the fixed-shape jit decode. Traceable — the
+    jitted master step of ``DecodePipeline`` inlines it after the
+    shard_map matvec so compute -> mask -> decode is one XLA program.
+
+    Returns (z, ok) with ``ok`` a traced bool (False: < k rows survived).
+    """
+    generator = jnp.asarray(generator)
+    n = generator.shape[0]
+    row_of = jnp.asarray(row_of)
+    partials = jnp.asarray(partials)
+    fin = jnp.asarray(finished_workers, dtype=bool)
+    # row index per packed slot; dead/pad slots pushed out of bounds
+    rows = jnp.where((row_of >= 0) & fin[:, None], row_of, n).ravel()
+    y = jnp.zeros((n,), partials.dtype).at[rows].set(
+        partials.ravel(), mode="drop"
+    )
+    alive = jnp.zeros((n,), bool).at[rows].set(True, mode="drop")
+    return decode_systematic_jit(generator, y, alive)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis", "use_kernel")
+)
+def _fused_master_step(
+    packed, x, finished_workers, generator, row_of, *, mesh, axis, use_kernel
+):
+    """One compiled coded round: sharded matvec -> mask -> decode.
+
+    Module-level so the jit cache is shared across ``DecodePipeline``
+    instances (Mesh objects are hashable): repeated pipelines over the
+    same deployment shapes reuse one compiled program.
+    """
+    if use_kernel:
+        from repro.kernels.coded_matvec import ops as cmv_ops
+
+        local = cmv_ops.blocked_matvec_batch
+    else:
+        local = _local_matvec
+    sharded = _shard_map(
+        lambda a_block, xv: local(a_block, xv),
+        mesh=mesh,
+        in_specs=(P(axis, None, None), P()),
+        out_specs=P(axis, None),
+        **_SHARD_MAP_NO_CHECK,
+    )
+    partials = sharded(packed, x)
+    return masked_decode(generator, row_of, partials, finished_workers)
+
+
+class DecodePipeline:
+    """Jit-native master step: matvec -> erasure mask -> decode, one jit.
+
+    Binds the deployment state (mesh, generator, slot->row map, kernel
+    choice) at construction; each call runs the whole coded round as a
+    single compiled program with no host transfer between the
+    distributed compute and the decode (see DESIGN.md §4).
+    """
+
+    def __init__(self, mesh: Mesh, generator, row_of, *,
+                 axis: str = "workers", use_kernel: bool = False):
+        self.mesh = mesh
+        self.axis = axis
+        self.use_kernel = use_kernel
+        self.generator = jnp.asarray(generator)
+        self.row_of = jnp.asarray(row_of)
+
+    def __call__(self, packed, x, finished_workers):
+        return _fused_master_step(
+            packed, x, finished_workers, self.generator, self.row_of,
+            mesh=self.mesh, axis=self.axis, use_kernel=self.use_kernel,
+        )
+
+
 def end_to_end_coded_matvec(
     mesh: Mesh,
     a,
@@ -129,14 +218,26 @@ def end_to_end_coded_matvec(
     *,
     key=None,
     use_kernel: bool = False,
+    jit_decode: bool = True,
 ):
-    """Convenience wrapper: encode -> distribute -> compute -> decode."""
+    """Convenience wrapper: encode -> distribute -> compute -> decode.
+
+    ``jit_decode=True`` (default) runs the fused ``DecodePipeline`` —
+    the result never leaves the device between compute and decode.
+    ``jit_decode=False`` keeps the legacy host-side numpy decode as a
+    reference path.
+    """
     k = a.shape[0]
     assert k == plan.k
     gen = make_generator(plan.n, k, key=key)
     packed, row_of = pack_coded_matrix(gen, a, plan)
-    partials = coded_matvec(mesh, jnp.asarray(packed), jnp.asarray(x),
-                            use_kernel=use_kernel)
     if finished_workers is None:
         finished_workers = np.ones((plan.num_workers,), dtype=bool)
+    if jit_decode:
+        pipeline = DecodePipeline(mesh, gen, row_of, use_kernel=use_kernel)
+        return pipeline(
+            jnp.asarray(packed), jnp.asarray(x), jnp.asarray(finished_workers)
+        )
+    partials = coded_matvec(mesh, jnp.asarray(packed), jnp.asarray(x),
+                            use_kernel=use_kernel)
     return decode_coded_result(gen, row_of, partials, finished_workers, k)

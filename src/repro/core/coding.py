@@ -18,6 +18,12 @@ Generators provided:
 Encoding is a matmul (performed once, offline, like the paper's setup
 phase); the Pallas kernel in ``repro/kernels/mds_encode`` provides the
 TPU-tiled version of the same contraction.
+
+Decoding comes in two flavours: ``decode_systematic_jit`` — the
+fixed-shape, device-resident decode used by the serving pipeline (one
+compiled gather+solve per round, composable under ``jax.lax.scan``) —
+and the numpy ``decode_systematic`` / ``decode_from_rows`` pair kept as
+reference oracles for tests and the legacy host-loop path.
 """
 from __future__ import annotations
 
@@ -71,6 +77,48 @@ def decode_from_rows(generator_rows, coded_values):
     """
     sol = jnp.linalg.lstsq(generator_rows, coded_values)[0]
     return sol
+
+
+@jax.jit
+def decode_systematic_jit(generator, coded_values, finished_mask):
+    """Fixed-shape, device-resident erasure decode (the serving hot path).
+
+    Unlike ``decode_systematic`` (the numpy reference oracle below) this
+    never leaves the device and never branches on data: the surviving
+    coded rows are selected with a stable argsort on the erasure mask —
+    survivors first, in index order — and the first k of them are
+    gathered into a static ``(k, k)`` system solved on-device. For a
+    systematic generator with few erasures that system is mostly identity
+    rows, so it stays well-conditioned; one step of iterative refinement
+    recovers oracle-level accuracy at float32.
+
+    Args:
+      generator: (n, k) MDS generator used at encode time.
+      coded_values: (n,) or (n, c) coded products; garbage where
+        ``finished_mask`` is False (garbage rows are never gathered
+        while >= k rows survive).
+      finished_mask: (n,) bool — which coded rows arrived by the deadline.
+
+    Returns (z, ok): the decoded (k,) or (k, c) product and a traced
+    bool that is False when fewer than k rows survived (z is zeroed; the
+    caller selects a fallback with ``jnp.where`` — see DESIGN.md §4).
+    """
+    g = jnp.asarray(generator)
+    n, k = g.shape
+    y = jnp.asarray(coded_values)
+    mask = jnp.asarray(finished_mask, dtype=bool)
+    # Survivors first, original order preserved -> static (k,) gather.
+    order = jnp.argsort(~mask, stable=True)
+    idx = order[:k]
+    g_s = g[idx]
+    y_s = y[idx].astype(g.dtype)
+    rhs = y_s if y_s.ndim == 2 else y_s[:, None]
+    lu, piv = jax.scipy.linalg.lu_factor(g_s)
+    z = jax.scipy.linalg.lu_solve((lu, piv), rhs)
+    z = z + jax.scipy.linalg.lu_solve((lu, piv), rhs - g_s @ z)  # refine
+    z = z if y_s.ndim == 2 else z[:, 0]
+    ok = jnp.sum(mask) >= k
+    return jnp.where(ok, z.astype(y.dtype), jnp.zeros_like(z, dtype=y.dtype)), ok
 
 
 def decode_systematic(generator, coded_values, finished_mask, k: int):

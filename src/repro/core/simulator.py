@@ -82,6 +82,28 @@ def simulate_threshold(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("num_trials", "model"))
+def _group_code_latency(
+    key, load, mus_g, alphas_g, valid, r_idx, k, num_trials, model
+):
+    """Padded single-jit group-code latency: one sample, one sort.
+
+    Groups are padded to the widest group (``valid`` marks real workers;
+    pad slots sample +inf so they sort last and can never be the r_j-th
+    order statistic), mirroring the threshold path's vectorization —
+    no Python loop over groups, one fused program for any cluster shape.
+    """
+    g, nmax = valid.shape
+    e = jax.random.exponential(key, (num_trials, g, nmax), dtype=jnp.float32)
+    scale = load if model.per_row else load / k
+    t = scale * (alphas_g + e / mus_g)
+    t = jnp.where(valid, t, jnp.inf)
+    t = jnp.sort(t, axis=2)
+    idx = jnp.broadcast_to(r_idx[None, :, None], (num_trials, g, 1))
+    per_group = jnp.take_along_axis(t, idx, axis=2)[:, :, 0]
+    return jnp.max(per_group, axis=1)
+
+
 def simulate_group_code(
     key,
     cluster: ClusterSpec,
@@ -100,23 +122,27 @@ def simulate_group_code(
     over groups of the r_j-th order statistic.
     """
     model = resolve_latency_model(model, per_row)
-    keys = jax.random.split(key, cluster.num_groups)
-    lat = jnp.zeros((num_trials,))
+    nmax = max(g.num_workers for g in cluster.groups)
+    ng = cluster.num_groups
+    valid = np.zeros((ng, nmax), dtype=bool)
+    r_idx = np.zeros((ng,), dtype=np.int32)
     for j, g in enumerate(cluster.groups):
+        valid[j, : g.num_workers] = True
         r_j = int(np.ceil(r_split[j] - 1e-9))
-        r_j = max(1, min(r_j, g.num_workers))
-        t = sample_worker_times(
-            keys[j],
-            jnp.full((g.num_workers,), load, dtype=jnp.float32),
-            jnp.full((g.num_workers,), g.mu, dtype=jnp.float32),
-            jnp.full((g.num_workers,), g.alpha, dtype=jnp.float32),
-            k,
-            num_trials,
-            model=model,
-        )
-        tj = jnp.sort(t, axis=1)[:, r_j - 1]
-        lat = jnp.maximum(lat, tj)
-    return lat
+        r_idx[j] = max(1, min(r_j, g.num_workers)) - 1
+    mus = jnp.asarray([g.mu for g in cluster.groups], jnp.float32)
+    alphas = jnp.asarray([g.alpha for g in cluster.groups], jnp.float32)
+    return _group_code_latency(
+        key,
+        jnp.float32(load),
+        mus[:, None],
+        alphas[:, None],
+        jnp.asarray(valid),
+        jnp.asarray(r_idx),
+        jnp.float32(k),
+        num_trials,
+        model,
+    )
 
 
 def expected_latency(

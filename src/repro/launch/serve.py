@@ -40,6 +40,12 @@ def main():
                     help="code size n for --scheme uniform_n")
     ap.add_argument("--scheme-r", type=int, default=None,
                     help="completion count r for --scheme uniform_r")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the coded block mix through the Pallas "
+                         "coded_matvec kernel")
+    ap.add_argument("--legacy-decode", action="store_true",
+                    help="per-token host loop with numpy decode (the path "
+                         "the jit pipeline replaces; for A/B timing)")
     args = ap.parse_args()
 
     config = get_arch(args.arch)
@@ -57,7 +63,9 @@ def main():
         )
     server = Server(
         model, params, cluster,
-        ServeConfig(max_decode_steps=args.max_new, scheme=scheme),
+        ServeConfig(max_decode_steps=args.max_new, scheme=scheme,
+                    use_kernel=args.use_kernel,
+                    jit_pipeline=not args.legacy_decode),
     )
     if server.coded_head is not None:
         h = server.coded_head

@@ -12,6 +12,17 @@ paper's load allocation, in block units) and returns the (R,)-per-block
 products ``E~_i h``. Any ``kb`` coded block-products reconstruct all
 logits — workers missing the deadline (T* x safety) are erasures.
 
+Jit-native decode pipeline (DESIGN.md §4): the whole generation —
+prefill, per-token decode, straggler-mask sampling, erasure decode and
+the insufficient-survivors fallback — is ONE compiled program driven by
+``jax.lax.scan``. The coded head precomputes its worker->block scatter
+map at init, samples finish masks inside the jitted step from
+``fold_in``'d keys, and decodes with the fixed-shape
+``decode_systematic_jit``; nothing touches the host between tokens. The
+legacy per-token host loop (numpy ``np.linalg.solve`` decode) survives
+behind ``ServeConfig(jit_pipeline=False)`` as the reference/baseline
+path for ``benchmarks/serve_throughput.py``.
+
 Engine integration: ``ClusterSpec -> CodedComputeEngine(k=kb)`` owns the
 plan, the (nb, kb) generator and the deadline, so the per-worker block
 counts follow the configured ``AllocationScheme`` (Theorem 2 by default;
@@ -25,11 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.coding import decode_systematic_jit
 from repro.core.engine import CodedComputeEngine
 from repro.core.planner import DeploymentPlan
-from repro.core.runtime_model import ClusterSpec
+from repro.core.runtime_model import ClusterSpec, sample_worker_times
 from repro.core.schemes import AllocationScheme
-from repro.models.model import Model, padded_vocab
+from repro.models.model import DTYPES_LOGITS, Model, padded_vocab
+
+NEG_INF = -1e30  # pad-vocab sentinel (matches Model._mask_pad_logits)
 
 
 @dataclasses.dataclass
@@ -38,10 +52,20 @@ class ServeConfig:
     deadline_safety: float = 3.0
     max_decode_steps: int = 32
     scheme: str | AllocationScheme = "optimal"  # registry name or object
+    use_kernel: bool = False  # Pallas coded-matvec kernel for the block mix
+    jit_pipeline: bool = True  # False: legacy per-token host loop (numpy)
 
 
 class CodedLMHead:
-    """MDS-coded unembedding for straggler-tolerant decode."""
+    """MDS-coded unembedding for straggler-tolerant decode.
+
+    Device-resident state for the jit pipeline is precomputed at init:
+    the (nb, kb) generator, the worker->block scatter map (which coded
+    blocks die when worker w misses the deadline), and the per-worker
+    shifted-exponential parameters the jitted finish-mask sampler draws
+    from. All ``*_jit`` methods are traceable and run under the server's
+    single compiled generation program.
+    """
 
     def __init__(self, embed_table, cluster: ClusterSpec, *, block_rows: int = 256,
                  key=None, scheme: str | AllocationScheme = "optimal",
@@ -54,6 +78,7 @@ class CodedLMHead:
         self.plan: DeploymentPlan = self.engine.plan
         self.nb = self.plan.n
         self.generator = np.asarray(self.engine.generator(key=key))
+        self.generator_j = jnp.asarray(self.generator)
         # coded blocks: (nb, R, D) = einsum over the block-reshaped table
         pad = self.kb * block_rows - vp
         tbl = np.pad(self.table, ((0, pad), (0, 0)))
@@ -63,18 +88,101 @@ class CodedLMHead:
         )
         self.deadline = self.engine.deadline(deadline_safety)
         self._rows_of_worker = self.plan.row_ranges  # block ranges per worker
+        # worker->block scatter map: block_owner[i] = worker holding coded
+        # block i, so a (W,) finish mask gathers to an (nb,) erasure mask
+        # in one device op (no per-worker Python loop at decode time).
+        owner = np.zeros((self.nb,), np.int32)
+        for w, (s, e) in enumerate(self._rows_of_worker):
+            owner[s:e] = w
+        self.block_owner = jnp.asarray(owner)
+        self._loads_w = jnp.asarray(self.plan.loads_per_worker, jnp.float32)
+        self._mus_w = jnp.asarray(
+            [self.plan.cluster.groups[j].mu for j in self.plan.group_of_worker]
+        )
+        self._alphas_w = jnp.asarray(
+            [self.plan.cluster.groups[j].alpha for j in self.plan.group_of_worker]
+        )
 
-    def worker_products(self, h):
+    # ------------------------------------------------------ jit pipeline
+    def finish_mask_jit(self, key, deadline):
+        """(W,) bool straggler mask, traceable (shifted-exp model).
+
+        Samples under the scheme's OWN latency model so the times are
+        commensurate with the deadline (which ``plan_deadline`` computes
+        under that same model — e.g. reisizadeh is per-row MODEL_30).
+        """
+        t = sample_worker_times(
+            key, self._loads_w, self._mus_w, self._alphas_w, self.kb, 1,
+            model=self.engine.scheme.latency_model,
+        )[0]
+        return t <= deadline
+
+    def encode_logits(self, logits, *, use_kernel: bool = False):
+        """Mix plain logit BLOCKS with G: (B, V) -> (nb, B, R) products.
+
+        Coded products are linear in the hidden state: (G (x) I_R) E h.
+        Since logits = E h, mixing logit blocks with G is numerically
+        identical to each worker computing E~_i h from h directly, so the
+        erasure/decode path is exercised end-to-end without re-running
+        the unembed matmul. ``use_kernel`` routes the mix through the
+        Pallas coded-matvec kernel (one matvec per rhs column).
+        """
+        b, v = logits.shape
+        vp = self.kb * self.block_rows
+        lf = jnp.pad(logits.astype(jnp.float32), ((0, 0), (0, vp - v)))
+        blocks = lf.reshape(b, self.kb, self.block_rows)
+        if use_kernel:
+            from repro.kernels.coded_matvec import ops as cmv_ops
+
+            cols = blocks.transpose(1, 0, 2).reshape(self.kb, b * self.block_rows)
+            mixed = jax.vmap(
+                lambda col: cmv_ops.blocked_matvec(self.generator_j, col),
+                in_axes=1, out_axes=1,
+            )(cols)
+            return mixed.reshape(self.nb, b, self.block_rows)
+        return jnp.einsum("nk,bkr->nbr", self.generator_j, blocks)
+
+    def decode_logits_jit(self, products, finished_workers):
+        """Fixed-shape on-device decode: (nb, B, R) + (W,) -> ((B, kb*R), ok).
+
+        The worker finish mask gathers through the precomputed scatter
+        map to an (nb,) block-erasure mask; ``decode_systematic_jit``
+        solves the static (kb, kb) system on-device. ``ok`` is a traced
+        bool — the caller folds the insufficient-survivors fallback in
+        with ``jnp.where`` instead of a Python branch.
+        """
+        alive = jnp.asarray(finished_workers, bool)[self.block_owner]
+        nb, b, r = products.shape
+        z, ok = decode_systematic_jit(
+            self.generator_j, products.reshape(nb, b * r), alive
+        )
+        logits = z.reshape(self.kb, b, r).transpose(1, 0, 2).reshape(b, -1)
+        return logits, ok
+
+    def worker_products(self, h, *, use_kernel: bool = False):
         """All coded block-products for a batch of hiddens h: (B, D).
 
         Returns (nb, B, R). In deployment each worker computes only its
         slice; here the full product is computed and the erasure mask is
         applied at decode time (deadline semantics — see DESIGN.md §3).
+        ``use_kernel`` routes the per-worker matvec through the Pallas
+        ``coded_matvec`` kernel.
         """
-        return jnp.einsum("nrd,bd->nbr", self.coded, h.astype(jnp.float32))
+        hf = h.astype(jnp.float32)
+        if use_kernel:
+            from repro.kernels.coded_matvec import ops as cmv_ops
 
+            per_seq = jax.vmap(lambda hb: cmv_ops.blocked_matvec_batch(self.coded, hb))
+            return jnp.moveaxis(per_seq(hf), 0, 1)
+        return jnp.einsum("nrd,bd->nbr", self.coded, hf)
+
+    # ------------------------------------------- host-side reference path
     def decode_logits(self, products, finished_workers) -> tuple[np.ndarray, bool]:
-        """Recover (B, Vp) logits from surviving coded block-products."""
+        """Recover (B, Vp) logits from surviving coded block-products.
+
+        Numpy reference oracle for ``decode_logits_jit`` (and the legacy
+        ``jit_pipeline=False`` serving path).
+        """
         products = np.asarray(products)  # (nb, B, R)
         fin = np.asarray(finished_workers, bool)
         alive_blocks = np.zeros((self.nb,), bool)
@@ -92,21 +200,17 @@ class CodedLMHead:
 
     def sample_finish_mask(self, key) -> np.ndarray:
         """Simulate which workers meet the deadline (shifted-exp model)."""
-        from repro.core.runtime_model import sample_worker_times
-
-        loads = jnp.asarray(self.plan.loads_per_worker, jnp.float32)
-        mus = jnp.asarray(
-            [self.plan.cluster.groups[j].mu for j in self.plan.group_of_worker]
-        )
-        alphas = jnp.asarray(
-            [self.plan.cluster.groups[j].alpha for j in self.plan.group_of_worker]
-        )
-        t = sample_worker_times(key, loads, mus, alphas, self.kb, 1)[0]
-        return np.asarray(t <= self.deadline)
+        return np.asarray(self.finish_mask_jit(key, self.deadline))
 
 
 class Server:
-    """Batched decode with an optional coded LM head."""
+    """Batched decode with an optional coded LM head.
+
+    The default path compiles a whole ``generate`` call — prefill scan,
+    decode scan, coded erasure decode per token — into one XLA program;
+    ``self.traces`` counts (re)traces so tests can assert that repeat
+    calls with the same shapes never re-enter Python between tokens.
+    """
 
     def __init__(self, model: Model, params, cluster: ClusterSpec | None = None,
                  cfg: ServeConfig | None = None):
@@ -124,23 +228,119 @@ class Server:
             else None
         )
         self._decode = jax.jit(model.decode_step)
+        self.traces = 0
+        self._generate_fn = jax.jit(
+            self._gen_program, static_argnames=("max_new",)
+        )
 
+    # ------------------------------------------------------- jit pipeline
+    def _coded_select(self, logits, step_key, deadline):
+        """One coded round on a (B, V) logits batch, fully traceable.
+
+        Pad-vocab sentinels (-1e30) are zeroed before the block mix (they
+        would otherwise dominate the float32 solve), decoded logits get
+        them re-masked, and the insufficient-survivors fallback is a
+        ``jnp.where`` on the decode-ok flag — no shape-dependent Python
+        branch inside the compiled program.
+        """
+        head = self.coded_head
+        vocab = self.model.config.vocab_size
+        ids = jnp.arange(logits.shape[-1])
+        lf = logits.astype(jnp.float32)
+        clean = jnp.where(ids[None, :] < vocab, lf, 0.0)
+        products = head.encode_logits(clean, use_kernel=self.cfg.use_kernel)
+        mask = head.finish_mask_jit(step_key, deadline)
+        dec, ok = head.decode_logits_jit(products, mask)
+        dec = dec[:, : logits.shape[-1]]
+        dec = jnp.where(ids[None, :] < vocab, dec, NEG_INF)
+        return jnp.where(ok, dec, lf)
+
+    def _gen_program(self, params, cache, prompts, key, deadline, *, max_new):
+        """The whole generation as one traceable program (two lax.scans)."""
+        self.traces += 1  # python side effect: runs only while tracing
+        b, s0 = prompts.shape
+        c = self.model.config
+        vp = padded_vocab(c.vocab_size)
+        dt = DTYPES_LOGITS[c.logits_dtype]
+
+        # Prefill is one lax.scan over the prompt: a single compiled call
+        # instead of s0 Python-dispatched steps. The attention math is
+        # still sequential per position — a batched prefill that fills
+        # the per-family decode caches from one lm_logits-style pass is
+        # the next optimization (DESIGN.md §4).
+        def prefill_body(carry, inp):
+            cache, _ = carry
+            tok, pos = inp
+            logits, cache = self.model.decode_step(params, cache, tok, pos)
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(
+            prefill_body,
+            (cache, jnp.zeros((b, vp), dt)),
+            (prompts.T, jnp.arange(s0, dtype=jnp.int32)),
+        )
+
+        def step_logits(logits, step):
+            if self.coded_head is None:
+                return logits
+            return self._coded_select(
+                logits, jax.random.fold_in(key, step), deadline
+            )
+
+        # every sampled token goes through the coded head, including the
+        # first post-prefill one (the old host loop skipped it)
+        tok0 = jnp.argmax(step_logits(logits, 0), -1).astype(jnp.int32)
+
+        def body(carry, t):
+            cache, tok = carry
+            logits, cache = self.model.decode_step(
+                params, cache, tok, s0 + t
+            )
+            ntok = jnp.argmax(step_logits(logits, t + 1), -1).astype(jnp.int32)
+            return (cache, ntok), ntok
+
+        (cache, _), toks = jax.lax.scan(
+            body, (cache, tok0), jnp.arange(max_new - 1, dtype=jnp.int32)
+        )
+        return jnp.concatenate([prompts, tok0[:, None], toks.T], axis=1)
+
+    # ------------------------------------------------------------ public
     def generate(self, prompts, max_new: int | None = None, *, key=None,
                  cache_len: int | None = None, extras=None):
         """Greedy decode. prompts: (B, S0) int32. Returns (B, S0+T)."""
-        key = key or jax.random.PRNGKey(0)
-        max_new = max_new or self.cfg.max_decode_steps
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_new = int(self.cfg.max_decode_steps if max_new is None else max_new)
+        if max_new == 0:
+            return jnp.asarray(prompts, jnp.int32)
         b, s0 = prompts.shape
         cache_len = cache_len or (s0 + max_new)
         cache = self.model.init_cache(b, cache_len, extras)
-        # prefill by stepping (simple and exact; a batched prefill kernel
-        # is the obvious optimization, exercised via lm_logits elsewhere)
-        tok = prompts[:, 0]
+        if not self.cfg.jit_pipeline:
+            return self._generate_hostloop(prompts, max_new, key, cache)
+        deadline = jnp.float32(
+            self.coded_head.deadline if self.coded_head is not None else 0.0
+        )
+        return self._generate_fn(
+            self.params, cache, jnp.asarray(prompts, jnp.int32), key,
+            deadline, max_new=max_new,
+        )
+
+    # ------------------------------------------------- legacy host loop
+    def _generate_hostloop(self, prompts, max_new, key, cache):
+        """Per-token Python loop with numpy decode (reference/baseline).
+
+        Kept for ``benchmarks/serve_throughput.py``: this is the path the
+        jit pipeline replaces — one host round-trip per prefill token and
+        per decoded token.
+        """
+        b, s0 = prompts.shape
         logits = None
         for pos in range(s0):
             logits, cache = self._decode(self.params, cache, prompts[:, pos],
                                          jnp.int32(pos))
         out = [prompts]
+        if self.coded_head is not None:
+            logits = self._coded_logits(logits, key, 0)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         for t in range(max_new):
             out.append(tok[:, None])
@@ -148,28 +348,24 @@ class Server:
                 break
             logits, cache = self._decode(self.params, cache, tok, jnp.int32(s0 + t))
             if self.coded_head is not None:
-                logits = self._coded_logits(cache, logits, key, t)
+                logits = self._coded_logits(logits, key, t + 1)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return jnp.concatenate(out, axis=1)
 
-    def _coded_logits(self, cache, fallback_logits, key, t):
-        """Recompute the final logits through the coded LM head."""
-        # Coded products are linear in the hidden state: (G (x) I_R) E h.
-        # Since logits = E h, mixing logit BLOCKS with G is numerically
-        # identical to what each worker computes from h directly — so the
-        # erasure/decode path is exercised end-to-end without re-running
-        # the unembed matmul. A sampled straggler mask (shifted-exp model,
-        # deadline = T* x safety) marks the erasures.
-        b = fallback_logits.shape[0]
-        vp = self.coded_head.kb * self.coded_head.block_rows
-        pad = vp - fallback_logits.shape[-1]
-        lf = jnp.pad(fallback_logits.astype(jnp.float32), ((0, 0), (0, pad)))
-        blocks = lf.reshape(b, self.coded_head.kb, self.coded_head.block_rows)
-        products = jnp.einsum(
-            "nk,bkr->nbr", jnp.asarray(self.coded_head.generator), blocks
+    def _coded_logits(self, fallback_logits, key, step):
+        """Recompute the final logits through the coded LM head (host path)."""
+        head = self.coded_head
+        vocab = self.model.config.vocab_size
+        ids = np.arange(fallback_logits.shape[-1])
+        lf = np.asarray(fallback_logits, np.float32)
+        clean = np.where(ids[None, :] < vocab, lf, 0.0)
+        products = head.encode_logits(
+            jnp.asarray(clean), use_kernel=self.cfg.use_kernel
         )
-        mask = self.coded_head.sample_finish_mask(jax.random.fold_in(key, t))
-        logits, ok = self.coded_head.decode_logits(products, mask)
+        mask = head.sample_finish_mask(jax.random.fold_in(key, step))
+        logits, ok = head.decode_logits(products, mask)
         if not ok:  # insufficient survivors: fall back (and a real system
             return fallback_logits  # would extend the deadline)
-        return jnp.asarray(logits[:, : fallback_logits.shape[-1]])
+        logits = logits[:, : fallback_logits.shape[-1]]
+        logits = np.where(ids[None, :] < vocab, logits, NEG_INF)
+        return jnp.asarray(logits)

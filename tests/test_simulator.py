@@ -88,6 +88,34 @@ def test_group_code_floor():
     assert t_opt < lats[1] / 5.0  # "orders of magnitude" at large N
 
 
+def test_group_code_vectorized_matches_analytic_single_group():
+    """Padded single-jit formulation: one group == analytic order stat."""
+    c = ClusterSpec.make([200], [1.5], 1.0)
+    lat = simulate_group_code(KEY, c, 5.0, [120], k=1000, num_trials=40_000)
+    n, mu, al = c.arrays()
+    analytic = float(
+        expected_order_stat(5.0, 120, n[0], mu[0], al[0], 1000,
+                            exact_harmonic=True)
+    )
+    assert float(jnp.mean(lat)) == pytest.approx(analytic, rel=0.02)
+
+
+def test_group_code_vectorized_heterogeneous_max_over_groups():
+    """Ragged groups (padding in play): the slow group's order stat wins."""
+    c = ClusterSpec.make([40, 60], [6.0, 0.5], 1.0)
+    lat = simulate_group_code(
+        KEY, c, 5.0, [20, 30], k=1000, num_trials=40_000
+    )
+    slow = float(
+        expected_order_stat(5.0, 30, 60, 0.5, 1.0, 1000, exact_harmonic=True)
+    )
+    fast = float(
+        expected_order_stat(5.0, 20, 40, 6.0, 1.0, 1000, exact_harmonic=True)
+    )
+    assert slow > 2 * fast  # the max is dominated by the slow group
+    assert float(jnp.mean(lat)) == pytest.approx(slow, rel=0.03)
+
+
 def test_infeasible_returns_inf():
     c = ClusterSpec.make([10], [1.0], 1.0)
     lat = simulate_threshold(KEY, c, [1.0], k=100, num_trials=8)
