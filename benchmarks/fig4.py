@@ -28,28 +28,33 @@ def make_cluster(n_total: int) -> ClusterSpec:
     return ClusterSpec.make(parts.tolist(), [16.0, 12.0, 8.0, 4.0, 1.0], 1.0)
 
 
-def run(verbose: bool = True) -> dict:
-    ns = [250, 500, 1000, 2000, 4000, 8000]
+def run(verbose: bool = True, ns=None, trials: int | None = None,
+        k: int = K, r_fixed: int = R_FIXED) -> dict:
+    """Paper setting by default; ``ns``/``trials``/``k``/``r_fixed`` let the
+    golden regression tests drive the same pipeline on tiny seeded
+    clusters (tests/test_fig_golden.py)."""
+    ns = [250, 500, 1000, 2000, 4000, 8000] if ns is None else ns
+    trials = TRIALS if trials is None else trials
     rows = []
     for i, n_total in enumerate(ns):
         c = make_cluster(n_total)
         key = jax.random.fold_in(KEY, i)
-        opt = CodedComputeEngine(c, K, Optimal())
+        opt = CodedComputeEngine(c, k, Optimal())
         baselines = {
             "uniform_n*": UniformN(n=opt.allocation.n),
-            "uniform_rate_half": UniformN(n=2.0 * K),
+            "uniform_rate_half": UniformN(n=2.0 * k),
             "uncoded": Uncoded(),
-            "group_code_r100": UniformR(r=R_FIXED),
+            "group_code_r100": UniformR(r=r_fixed),
         }
         row = {
             "N": c.total_workers,
-            "proposed": opt.expected_latency(key, TRIALS),
+            "proposed": opt.expected_latency(key, trials),
             "lower_bound_T*": opt.t_star,
-            "group_code_floor": 1.0 / R_FIXED,
+            "group_code_floor": 1.0 / r_fixed,
         }
         for name, scheme in baselines.items():
-            row[name] = CodedComputeEngine(c, K, scheme).expected_latency(
-                key, TRIALS
+            row[name] = CodedComputeEngine(c, k, scheme).expected_latency(
+                key, trials
             )
         rows.append(row)
     last = rows[-1]

@@ -15,28 +15,33 @@ from repro.core.engine import CodedComputeEngine
 from repro.core.schemes import Optimal, Uncoded, UniformN, UniformR
 
 
-def run(verbose: bool = True) -> dict:
-    base = make_cluster(2500)
-    qs = np.logspace(-2, 1.5, 8)
+def run(verbose: bool = True, n_total: int = 2500, qs=None,
+        trials: int | None = None, k: int = K,
+        r_fixed: int = R_FIXED) -> dict:
+    """Paper setting by default; the keyword params let the golden
+    regression tests drive a tiny seeded cluster through the same path."""
+    base = make_cluster(n_total)
+    qs = np.logspace(-2, 1.5, 8) if qs is None else np.asarray(qs, float)
+    trials = TRIALS if trials is None else trials
     rows = []
     for i, q in enumerate(qs):
         c = base.scale_mu(float(q))
         key = jax.random.fold_in(KEY, 100 + i)
-        opt = CodedComputeEngine(c, K, Optimal())
+        opt = CodedComputeEngine(c, k, Optimal())
         row = {
             "q": float(q),
-            "proposed": opt.expected_latency(key, TRIALS),
+            "proposed": opt.expected_latency(key, trials),
             "T*": opt.t_star,
         }
         baselines = {
             "uniform_n*": UniformN(n=opt.allocation.n),
-            "uniform_rate_half": UniformN(n=2.0 * K),
+            "uniform_rate_half": UniformN(n=2.0 * k),
             "uncoded": Uncoded(),
-            "group_code_r100": UniformR(r=R_FIXED),
+            "group_code_r100": UniformR(r=r_fixed),
         }
         for name, scheme in baselines.items():
-            row[name] = CodedComputeEngine(c, K, scheme).expected_latency(
-                key, TRIALS
+            row[name] = CodedComputeEngine(c, k, scheme).expected_latency(
+                key, trials
             )
         rows.append(row)
     first, last = rows[0], rows[-1]

@@ -24,17 +24,22 @@ def make_cluster(n_total: int) -> ClusterSpec:
     return ClusterSpec.make(parts, [1.0, 4.0, 8.0], [1.0, 4.0, 12.0])
 
 
-def run(verbose: bool = True) -> dict:
+def run(verbose: bool = True, ns=None, trials: int | None = None,
+        k: int = K) -> dict:
+    """Paper setting by default; ``ns``/``trials``/``k`` let the golden
+    regression tests drive tiny seeded clusters through the same path."""
+    ns = [100, 300, 1000, 3000] if ns is None else ns
+    trials = TRIALS if trials is None else trials
     rows = []
-    for i, n_total in enumerate([100, 300, 1000, 3000]):
+    for i, n_total in enumerate(ns):
         c = make_cluster(n_total)
         key = jax.random.fold_in(KEY, 400 + i)
-        ours = CodedComputeEngine(c, K, Optimal(model=LatencyModel.MODEL_30))
-        reis = CodedComputeEngine(c, K, Reisizadeh())
+        ours = CodedComputeEngine(c, k, Optimal(model=LatencyModel.MODEL_30))
+        reis = CodedComputeEngine(c, k, Reisizadeh())
         rows.append({
             "N": c.total_workers,
-            "ours_cor2": ours.expected_latency(key, TRIALS),
-            "reisizadeh": reis.expected_latency(key, TRIALS),
+            "ours_cor2": ours.expected_latency(key, trials),
+            "reisizadeh": reis.expected_latency(key, trials),
             "T*_b": ours.t_star,
         })
     last = rows[-1]

@@ -16,6 +16,7 @@ from benchmarks import (
     fig7,
     fig8,
     fig9,
+    fig_comm,
     roofline,
     serve_throughput,
 )
@@ -29,6 +30,7 @@ def main():
     mods = {
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
+        "fig_comm": fig_comm,
         "roofline": roofline, "serve_throughput": serve_throughput,
     }
     names = args.only.split(",") if args.only else list(mods)

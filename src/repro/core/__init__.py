@@ -26,6 +26,9 @@ Layout
 """
 from repro.core.allocation import (
     AllocationPlan,
+    comm_aware_allocation,
+    comm_t_star,
+    comm_uniform_allocation,
     optimal_allocation,
     optimal_r,
     reisizadeh_allocation,
@@ -52,6 +55,8 @@ from repro.core.runtime_model import (
 )
 from repro.core.schemes import (
     AllocationScheme,
+    CommAware,
+    CommUniform,
     Optimal,
     Reisizadeh,
     Uncoded,
@@ -61,6 +66,7 @@ from repro.core.schemes import (
     register_scheme,
     scheme_for_plan,
     scheme_names,
+    scheme_params,
 )
 
 __all__ = [
@@ -68,6 +74,8 @@ __all__ = [
     "AllocationScheme",
     "ClusterSpec",
     "CodedComputeEngine",
+    "CommAware",
+    "CommUniform",
     "DeploymentPlan",
     "GroupSpec",
     "LatencyModel",
@@ -76,6 +84,9 @@ __all__ = [
     "Uncoded",
     "UniformN",
     "UniformR",
+    "comm_aware_allocation",
+    "comm_t_star",
+    "comm_uniform_allocation",
     "deploy",
     "expected_order_stat",
     "lambertw0",
@@ -89,6 +100,7 @@ __all__ = [
     "replan_on_membership_change",
     "scheme_for_plan",
     "scheme_names",
+    "scheme_params",
     "t_star",
     "uncoded",
     "uniform_given_n",

@@ -9,6 +9,13 @@ Implemented schemes
 * ``uniform_given_r``           — Section III-D-2 / Theorem 4 (= [33]):
   ``l = k/r`` with the per-group split ``r_j`` solved from eq. (28)+(26).
 * ``reisizadeh_allocation``     — Appendix D (the scheme of [32]).
+* ``comm_aware_allocation``     — communication-delay-aware optimum
+  under the CommDelay model (arXiv:2109.11246): per-group transfer
+  terms shift the Lambert-W inner problem and break the closed form of
+  the outer deadline equation, which is solved numerically. Degenerates
+  exactly to ``optimal_allocation`` when every transfer term vanishes.
+* ``comm_uniform_allocation``   — uniform-split baseline under the same
+  comm model (the comparison scheme of ``benchmarks/fig_comm.py``).
 
 All functions are pure jnp (jittable, differentiable where meaningful)
 and operate on per-group arrays ``(N, mu, alpha)``; ``ClusterSpec`` from
@@ -26,6 +33,7 @@ from repro.core.lambertw import lambertwm1_neg_exp
 from repro.core.runtime_model import (
     ClusterSpec,
     LatencyModel,
+    comm_terms,
     resolve_latency_model,
     xi,
 )
@@ -258,6 +266,150 @@ def reisizadeh_allocation(cluster: ClusterSpec, k: int) -> AllocationPlan:
         k=k,
         t_star=float("nan"),
         scheme="reisizadeh",
+    )
+
+
+def comm_deadline_terms(cluster: ClusterSpec, upload: float, download: float):
+    """CommDelay per-group terms ``(c, g, xi*)`` of the deadline equation.
+
+    ``c_j = upload/b_j`` is the fixed transfer shift; the download cost
+    ``download/b_j`` adds to ``alpha_j`` before the Lambert-W inner
+    problem, giving throughput slope ``g_j = r*_j/xi*_j = -mu_j N_j/W_j``
+    and ``xi*_j = -(1 + W_j)/mu_j``. The comm-augmented lower bound is
+    the root of ``sum_j g_j (t - c_j)_+ = 1`` (see
+    ``comm_aware_allocation``).
+    """
+    n_w, mu, al = cluster.arrays()
+    c, dal = comm_terms(cluster, upload, download)
+    a_eff = np.asarray(al) + dal
+    w = _w_term(np.asarray(mu), a_eff)
+    g = np.asarray(-np.asarray(mu) * np.asarray(n_w) / w)
+    xs = np.asarray(-(1.0 + w) / np.asarray(mu))
+    return c, g, xs
+
+
+def comm_t_star(cluster: ClusterSpec, upload: float, download: float) -> float:
+    """Comm-augmented minimum expected latency (numeric; bound of fig_comm).
+
+    Solves ``sum_j g_j (t - c_j)_+ = 1`` for t. The left side is a
+    piecewise-linear increasing function of t (kinks at the per-group
+    transfer shifts c_j), so bisection on
+    ``[min c, max c + 1/sum g]`` always converges; with all ``c_j = 0``
+    the closed form ``t = 1/sum_j g_j`` (= eq. (18) at the comm-shifted
+    alphas) is returned directly — the Lambert-W fast path.
+    """
+    c, g, _ = comm_deadline_terms(cluster, upload, download)
+    if np.all(c == 0.0):
+        return float(1.0 / np.sum(g))
+
+    def covered(t):
+        return float(np.sum(g * np.maximum(t - c, 0.0)))
+
+    lo = float(np.min(c))
+    hi = float(np.max(c) + 1.0 / np.sum(g))
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if covered(mid) < 1.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def comm_aware_allocation(
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    upload: float = 1.0,
+    download: float = 1.0,
+) -> AllocationPlan:
+    """Communication-delay-aware optimal allocation (arXiv:2109.11246).
+
+    Under the CommDelay model each group pays a fixed input-broadcast
+    shift ``c_j = upload/b_j`` and a per-load download cost that shifts
+    ``alpha_j`` by ``download/b_j``. The paper's inner problem (the best
+    completion fraction per group) is untouched by ``c_j`` — maximizing
+    ``r_j/xi_j(r_j)`` still gives the Lambert-W solution at the shifted
+    alpha — but the outer deadline equation becomes
+
+        sum_j g_j * max(t - c_j, 0) = 1,    g_j = -mu_j N_j / W_j,
+
+    which has no closed form for heterogeneous ``c_j`` and is solved by
+    bisection (``comm_t_star``). Loads follow as
+    ``l_j = k (t* - c_j)_+ / xi*_j``: groups whose transfer shift
+    exceeds the optimal deadline get ZERO load — slow links are excluded
+    entirely, the qualitative change communication awareness buys.
+
+    With every transfer term zero (infinite bandwidths, or
+    ``upload == download == 0``) this delegates to
+    ``optimal_allocation`` and reproduces its plan exactly.
+    """
+    # unlike the paper's schemes, the transfer costs are NOT recoverable
+    # from the plan's own fields, so attach the typed scheme here (lazy
+    # import; schemes.py imports us) — replan/deadline on a plan built
+    # from this bare function must not silently fall back to default costs
+    from repro.core.schemes import CommAware
+
+    scheme_obj = CommAware(upload=float(upload), download=float(download))
+    c, dal = comm_terms(cluster, upload, download)
+    if np.all(c == 0.0) and np.all(dal == 0.0):
+        # transfer terms vanish entirely -> exact Theorem 2 plan
+        plan = optimal_allocation(cluster, k)
+        return dataclasses.replace(
+            plan, scheme="comm_aware", scheme_obj=scheme_obj
+        )
+    _, g, xs = comm_deadline_terms(cluster, upload, download)
+    n_w, mu, al = cluster.arrays()
+    t = comm_t_star(cluster, upload, download)
+    slack = np.maximum(t - c, 0.0)
+    loads_np = np.asarray(k * slack / xs)
+    active = loads_np > 0
+    r_star = np.asarray(optimal_r(n_w, mu, np.asarray(al) + dal))
+    r = np.where(active, r_star, 0.0)
+    loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
+    n = float(np.sum(np.asarray(n_w) * loads_np))
+    return AllocationPlan(
+        loads=loads_np,
+        loads_int=loads_int,
+        r=r,
+        n=n,
+        n_int=int(np.sum(np.asarray(n_w, dtype=np.int64) * loads_int)),
+        k=k,
+        t_star=float(t),
+        scheme="comm_aware",
+        scheme_obj=scheme_obj,
+    )
+
+
+def comm_uniform_allocation(
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    n: float | None = None,
+    upload: float = 1.0,
+    download: float = 1.0,
+) -> AllocationPlan:
+    """Uniform-split baseline under the CommDelay model.
+
+    Every worker (slow links included) gets ``l = n/N`` rows of an
+    ``(n, k)`` code; ``n`` defaults to the comm-aware optimum's code
+    size, i.e. "same redundancy, comm-blind uniform split". No analytic
+    latency (heterogeneous mixture + per-group shifts) — t_star is NaN
+    and consumers fall back to Monte Carlo, like ``uniform_given_n``.
+    """
+    from repro.core.schemes import CommUniform  # lazy: schemes imports us
+
+    if n is None:
+        n = comm_aware_allocation(
+            cluster, k, upload=upload, download=download
+        ).n
+    plan = uniform_given_n(cluster, k, float(n))
+    return dataclasses.replace(
+        plan,
+        scheme="comm_uniform",
+        scheme_obj=CommUniform(
+            n=float(n), upload=float(upload), download=float(download)
+        ),
     )
 
 

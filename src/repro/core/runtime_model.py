@@ -15,8 +15,24 @@ Two probabilistic models appear in the paper:
 
       T_b = alpha_j * l_j + (l_j / mu_j) * Exp(1).
 
-Both are shifted exponentials that scale linearly in the load; all
-formulas below take a ``per_row`` flag selecting model (30).
+* **CommDelay** (the communication-delay extension of Sun et al.,
+  arXiv:2109.11246): model (1) plus per-worker transfer terms paid
+  against the group's link bandwidth ``b_j``,
+
+      T = upload/b_j + (l_j/k) * (alpha_j + download/b_j)
+                     + (l_j/(k*mu_j)) * Exp(1)
+
+  i.e. a fixed input-broadcast shift ``c_j = upload/b_j`` (independent
+  of the load) and a result-download term proportional to the load,
+  which simply adds ``download/b_j`` to the compute shift ``alpha_j``.
+  With ``b_j = inf`` (the default bandwidth) both terms vanish and the
+  model degenerates exactly to model (1).
+
+The first two are shifted exponentials that scale linearly in the load;
+all formulas below take a ``per_row`` flag selecting model (30). The
+comm-delay terms are produced by ``comm_terms`` from the cluster's
+per-group bandwidths and enter the simulator as a per-worker constant
+shift plus an alpha adjustment.
 
 Key closed forms (paper eq. (6) and Appendix A): the expected r-th order
 statistic of N i.i.d. such times is
@@ -44,13 +60,19 @@ class LatencyModel(enum.Enum):
 
     ``MODEL_1`` is the paper's main model (1): round-trip time scales with
     ``l/k`` (normalized by problem size). ``MODEL_30`` is the per-row model
-    (30) of Section III-E / [32]: time scales with ``l`` directly. This enum
-    replaces the ``per_row`` boolean that used to be threaded through every
-    layer; the old keyword is still accepted as a deprecated alias.
+    (30) of Section III-E / [32]: time scales with ``l`` directly.
+    ``COMM_DELAY`` is model (1) augmented with per-worker transfer terms
+    (arXiv:2109.11246): the load scaling is the same as ``MODEL_1``; the
+    comm shift/alpha adjustments are derived from the cluster's per-group
+    bandwidths via ``comm_terms`` and carried separately (they depend on
+    the cluster, not just the load). This enum replaces the ``per_row``
+    boolean that used to be threaded through every layer; the old keyword
+    is still accepted as a deprecated alias.
     """
 
     MODEL_1 = "model_1"
     MODEL_30 = "model_30"
+    COMM_DELAY = "comm_delay"
 
     @property
     def per_row(self) -> bool:
@@ -86,6 +108,16 @@ class GroupSpec:
     num_workers: int  # N_j
     mu: float  # straggling (rate) parameter mu_(j)
     alpha: float = 1.0  # shift parameter alpha_(j)
+    #: link bandwidth b_(j) for the CommDelay model; inf (the default)
+    #: means transfer is free and every comm term vanishes, so existing
+    #: call sites and saved plans are unchanged.
+    bandwidth: float = float("inf")
+
+    def __post_init__(self):
+        if not self.bandwidth > 0:
+            raise ValueError(
+                f"GroupSpec bandwidth must be > 0, got {self.bandwidth!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,16 +132,46 @@ class ClusterSpec:
         num_workers: Sequence[int],
         mus: Sequence[float],
         alphas: Sequence[float] | float = 1.0,
+        bandwidths: Sequence[float] | float = float("inf"),
     ) -> "ClusterSpec":
         if not hasattr(alphas, "__len__"):
             alphas = [float(alphas)] * len(num_workers)
-        assert len(num_workers) == len(mus) == len(alphas)
+        if not hasattr(bandwidths, "__len__"):
+            bandwidths = [float(bandwidths)] * len(num_workers)
+        assert len(num_workers) == len(mus) == len(alphas) == len(bandwidths)
         return cls(
             tuple(
-                GroupSpec(int(n), float(m), float(a))
-                for n, m, a in zip(num_workers, mus, alphas)
+                GroupSpec(int(n), float(m), float(a), float(b))
+                for n, m, a, b in zip(num_workers, mus, alphas, bandwidths)
             )
         )
+
+    @classmethod
+    def parse(
+        cls, groups: str, default_bandwidth: float | None = None
+    ) -> "ClusterSpec":
+        """CLI group syntax: ``'6:2.0,6:0.5'`` or ``'6:2.0:8.0,6:0.5:1.0'``.
+
+        Each comma-separated entry is ``N:mu`` or ``N:mu:bandwidth``;
+        groups without an explicit bandwidth get ``default_bandwidth``
+        (infinite, i.e. comm-free, when that is None). Shared by
+        ``launch/serve.py --groups`` and ``launch/dryrun.py
+        --coded-groups``.
+        """
+        fallback = float("inf") if default_bandwidth is None else float(
+            default_bandwidth
+        )
+        ns, mus, bws = [], [], []
+        for part in groups.split(","):
+            fields = part.split(":")
+            if len(fields) not in (2, 3):
+                raise ValueError(
+                    f"bad group {part!r}: expected N:mu or N:mu:bandwidth"
+                )
+            ns.append(int(fields[0]))
+            mus.append(float(fields[1]))
+            bws.append(float(fields[2]) if len(fields) == 3 else fallback)
+        return cls.make(ns, mus, 1.0, bws)
 
     @property
     def num_groups(self) -> int:
@@ -131,9 +193,29 @@ class ClusterSpec:
         """Scale every group's straggling parameter by q (paper's Fig 2/5)."""
         return ClusterSpec(
             tuple(
-                GroupSpec(g.num_workers, g.mu * q, g.alpha) for g in self.groups
+                GroupSpec(g.num_workers, g.mu * q, g.alpha, g.bandwidth)
+                for g in self.groups
             )
         )
+
+    def with_bandwidths(
+        self, bandwidths: Sequence[float] | float
+    ) -> "ClusterSpec":
+        """Same cluster with per-group (or shared scalar) link bandwidths."""
+        if not hasattr(bandwidths, "__len__"):
+            bandwidths = [float(bandwidths)] * self.num_groups
+        assert len(bandwidths) == self.num_groups
+        return ClusterSpec(
+            tuple(
+                GroupSpec(g.num_workers, g.mu, g.alpha, float(b))
+                for g, b in zip(self.groups, bandwidths)
+            )
+        )
+
+    @property
+    def bandwidths(self) -> np.ndarray:
+        """Per-group link bandwidths b_(j) as a float array (inf = free)."""
+        return np.asarray([g.bandwidth for g in self.groups], dtype=np.float64)
 
 
 def harmonic(n):
@@ -183,12 +265,16 @@ def sample_worker_times(
     *,
     per_row: bool | None = None,
     model: LatencyModel | None = None,
+    shift_per_worker=None,
     dtype=jnp.float32,
 ):
-    """Sample (num_trials, N) round-trip times under model (1) or (30).
+    """Sample (num_trials, N) round-trip times under model (1), (30) or comm.
 
     ``loads_per_worker`` etc. are length-N arrays (already expanded from
-    groups). Returns times with shape (num_trials, N).
+    groups). ``shift_per_worker`` is the CommDelay fixed transfer shift
+    ``c_j`` (expanded per worker, added load-independently); for the
+    comm model the download term is folded into the alphas by the caller
+    (see ``comm_terms``). Returns times with shape (num_trials, N).
     """
     model = resolve_latency_model(model, per_row)
     l = jnp.asarray(loads_per_worker, dtype=dtype)
@@ -196,8 +282,30 @@ def sample_worker_times(
     al = jnp.asarray(alphas_per_worker, dtype=dtype)
     e = jax.random.exponential(key, (num_trials, l.shape[0]), dtype=dtype)
     if model.per_row:
-        return al * l + (l / mu) * e
-    return al * l / k + (l / (k * mu)) * e
+        t = al * l + (l / mu) * e
+    else:
+        t = al * l / k + (l / (k * mu)) * e
+    if shift_per_worker is not None:
+        t = t + jnp.asarray(shift_per_worker, dtype=dtype)
+    return t
+
+
+def comm_terms(cluster: ClusterSpec, upload: float, download: float):
+    """Per-group CommDelay transfer terms ``(c_j, dalpha_j)``.
+
+    ``c_j = upload / b_j`` is the fixed input-broadcast shift (paid once
+    per round, independent of the load); ``dalpha_j = download / b_j`` is
+    the per-unit-load result-download cost that adds to the compute shift
+    ``alpha_j``. Groups with infinite bandwidth (the default) contribute
+    exactly zero, so the model degenerates to model (1).
+    """
+    if upload < 0 or download < 0:
+        raise ValueError(
+            f"comm costs must be >= 0, got upload={upload}, download={download}"
+        )
+    b = cluster.bandwidths
+    inv_b = np.where(np.isinf(b), 0.0, 1.0 / b)
+    return upload * inv_b, download * inv_b
 
 
 def expand_groups(cluster: ClusterSpec, per_group_values: Sequence[float]):

@@ -12,15 +12,23 @@ call site growing an if/elif chain:
     lat = scheme.simulate(key, cluster, plan, num_trials=4000)
     plan2 = scheme.replan(new_cluster, k)      # params travel with the object
 
-Adding a scheme from related work (e.g. communication-delay-aware
-allocation, arXiv:2109.11246, or heterogeneity-aware gradient coding,
-arXiv:1901.09339) is one dataclass + one ``register_scheme`` call; the
-planner, simulator, engine, fault-tolerance and benchmark layers pick it
-up through the registry with no further edits.
+Adding a scheme from related work is one dataclass + one
+``register_scheme`` call; the planner, simulator, engine,
+fault-tolerance and benchmark layers pick it up through the registry
+with no further edits. The communication-delay-aware family of Sun et
+al. (arXiv:2109.11246) landed exactly that way: ``CommAware`` /
+``CommUniform`` below are plain registry citizens whose transfer-cost
+params ride on the dataclass, with per-group link bandwidths coming
+from ``ClusterSpec``.
+
+``make_scheme`` validates parameters against what each factory declares:
+unknown or inapplicable kwargs raise instead of being silently dropped
+(a typo'd ``--scheme uniform_n --r 3`` used to no-op).
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Mapping
 
 import jax.numpy as jnp
@@ -205,27 +213,160 @@ class Uncoded(AllocationScheme):
         return allocation.uncoded(cluster, k)
 
 
+@dataclasses.dataclass(frozen=True)
+class _CommDelayScheme(AllocationScheme):
+    """Shared CommDelay behaviour: transfer-cost params + comm simulation.
+
+    ``upload``/``download`` are the per-round transfer costs divided by
+    each group's ``ClusterSpec`` bandwidth to form the comm terms
+    (``runtime_model.comm_terms``); infinite bandwidths make both vanish.
+    """
+
+    upload: float = 1.0
+    download: float = 1.0
+
+    def __post_init__(self):
+        if self.upload < 0 or self.download < 0:
+            raise ValueError(
+                f"{type(self).__name__} transfer costs must be >= 0, got "
+                f"upload={self.upload!r}, download={self.download!r}"
+            )
+
+    @property
+    def latency_model(self) -> LatencyModel:
+        return LatencyModel.COMM_DELAY
+
+    def simulate(
+        self,
+        key,
+        cluster: ClusterSpec,
+        plan: AllocationPlan,
+        num_trials: int = 10_000,
+        *,
+        model: LatencyModel | None = None,
+        use_integer_loads: bool = False,
+    ):
+        loads = plan.loads_int if use_integer_loads else plan.loads
+        if model is not None and model is not LatencyModel.COMM_DELAY:
+            # explicit override: evaluate the plan comm-blind
+            return simulator.simulate_threshold(
+                key, cluster, loads, plan.k, num_trials, model=model
+            )
+        return simulator.simulate_comm_threshold(
+            key, cluster, loads, plan.k, num_trials,
+            upload=self.upload, download=self.download,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CommAware(_CommDelayScheme):
+    """Communication-delay-aware optimum (Sun et al., arXiv:2109.11246).
+
+    Numeric optimizer over the comm-augmented lower bound: the Lambert-W
+    inner problem survives at comm-shifted alphas, the outer deadline
+    equation is solved by bisection, and groups whose transfer shift
+    exceeds the optimal deadline get zero load. Where every transfer
+    term vanishes (infinite bandwidths / zero costs) the plan is exactly
+    ``Optimal``'s (the Lambert-W fast path).
+    """
+
+    name = "comm_aware"
+
+    def _allocate(self, cluster: ClusterSpec, k: int) -> AllocationPlan:
+        return allocation.comm_aware_allocation(
+            cluster, k, upload=self.upload, download=self.download
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CommUniform(_CommDelayScheme):
+    """Uniform-split baseline under the CommDelay model.
+
+    ``n`` defaults to the comm-aware optimum's code size, i.e. the same
+    redundancy split uniformly over every worker, slow links included —
+    the comm-blind comparator of ``benchmarks/fig_comm.py``.
+    """
+
+    name = "comm_uniform"
+
+    n: float | None = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.n is not None and not self.n > 0:
+            raise ValueError(
+                f"CommUniform needs the total coded rows n > 0, got n={self.n!r}"
+            )
+
+    def _allocate(self, cluster: ClusterSpec, k: int) -> AllocationPlan:
+        return allocation.comm_uniform_allocation(
+            cluster, k, n=self.n, upload=self.upload, download=self.download
+        )
+
+
 # --------------------------------------------------------------- registry
 SchemeFactory = Callable[..., AllocationScheme]
 
-_REGISTRY: dict[str, SchemeFactory] = {}
+
+@dataclasses.dataclass(frozen=True)
+class _Registration:
+    factory: SchemeFactory
+    params: frozenset  # keyword params this factory accepts
 
 
-def register_scheme(name: str, factory: SchemeFactory) -> None:
+_REGISTRY: dict[str, _Registration] = {}
+
+
+def _factory_params(factory: SchemeFactory) -> frozenset:
+    """Keyword parameters a factory declares (its accepted scheme params).
+
+    ``**kwargs`` catch-alls do NOT widen the set: only named parameters
+    count, so ``make_scheme`` can reject typo'd or inapplicable params
+    instead of silently swallowing them.
+    """
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):  # builtins / exotic callables
+        return frozenset()
+    return frozenset(
+        p.name
+        for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+    )
+
+
+def register_scheme(
+    name: str, factory: SchemeFactory, *, params=None
+) -> None:
     """Register a scheme factory under a lookup name.
 
-    ``factory(**params)`` must return an ``AllocationScheme``; it receives
-    the keyword params handed to ``make_scheme`` and may ignore extras
-    (legacy callers pass the full ``per_row``/``n``/``r`` trio).
+    ``factory(**params)`` must return an ``AllocationScheme``. The set of
+    accepted parameters is taken from the factory's named keyword
+    arguments (or the explicit ``params`` override); ``make_scheme``
+    rejects anything outside it.
     """
     if name in _REGISTRY:
         raise ValueError(f"scheme {name!r} already registered")
-    _REGISTRY[name] = factory
+    accepted = _factory_params(factory) if params is None else frozenset(params)
+    _REGISTRY[name] = _Registration(factory, accepted)
 
 
 def scheme_names() -> tuple[str, ...]:
     """All registered lookup names (CLI choices, config validation)."""
     return tuple(sorted(_REGISTRY))
+
+
+def scheme_params(name: str) -> tuple[str, ...]:
+    """The keyword parameters a registered scheme accepts (sorted).
+
+    Lets generic callers (CLI help, the scheme-invariant test suite)
+    construct any registered scheme without per-scheme knowledge.
+    """
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {', '.join(scheme_names())}"
+        )
+    return tuple(sorted(_REGISTRY[name].params))
 
 
 def make_scheme(
@@ -237,32 +378,75 @@ def make_scheme(
     r: int | None = None,
     **params,
 ) -> AllocationScheme:
-    """Resolve a registered scheme name + params to a typed scheme object."""
+    """Resolve a registered scheme name + params to a typed scheme object.
+
+    Only parameters the scheme's factory declares are accepted; ``None``
+    values mean "not provided" (legacy callers pass the full
+    ``per_row``/``n``/``r`` trio unconditionally) and are dropped before
+    the check, so a typo'd or inapplicable parameter raises instead of
+    silently no-opping.
+    """
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown scheme {name!r}; registered: {', '.join(scheme_names())}"
         )
-    return _REGISTRY[name](per_row=per_row, model=model, n=n, r=r, **params)
+    reg = _REGISTRY[name]
+    provided = {"per_row": per_row, "model": model, "n": n, "r": r, **params}
+    provided = {key: v for key, v in provided.items() if v is not None}
+    unknown = sorted(set(provided) - reg.params)
+    if unknown:
+        accepted = ", ".join(sorted(reg.params)) or "(none)"
+        raise ValueError(
+            f"scheme {name!r} does not accept parameter(s) "
+            f"{', '.join(unknown)}; accepted: {accepted}"
+        )
+    return reg.factory(**provided)
 
 
-def _make_optimal(*, per_row=None, model=None, **_):
+def _make_optimal(*, per_row=None, model=None):
     return Optimal(model=resolve_latency_model(model, per_row))
 
 
-def _make_optimal_per_row(**_):
+def _make_optimal_per_row(*, per_row=None, model=None):
+    m = resolve_latency_model(model, per_row, default=LatencyModel.MODEL_30)
+    if m is not LatencyModel.MODEL_30:
+        raise ValueError(
+            "scheme 'optimal_per_row' is fixed to MODEL_30; use 'optimal' "
+            "with model=MODEL_1 instead"
+        )
     return Optimal(model=LatencyModel.MODEL_30)
 
 
-def _make_uniform_n(*, n=None, **_):
+def _make_uniform_n(*, n=None):
     if n is None:
         raise ValueError("scheme 'uniform_n' requires the code size n")
     return UniformN(n=float(n))
 
 
-def _make_uniform_r(*, r=None, **_):
+def _make_uniform_r(*, r=None):
     if r is None:
         raise ValueError("scheme 'uniform_r' requires the completion count r")
     return UniformR(r=int(r))
+
+
+def _make_comm_aware(*, upload=None, download=None):
+    kw = {}
+    if upload is not None:
+        kw["upload"] = float(upload)
+    if download is not None:
+        kw["download"] = float(download)
+    return CommAware(**kw)
+
+
+def _make_comm_uniform(*, n=None, upload=None, download=None):
+    kw = {}
+    if n is not None:
+        kw["n"] = float(n)
+    if upload is not None:
+        kw["upload"] = float(upload)
+    if download is not None:
+        kw["download"] = float(download)
+    return CommUniform(**kw)
 
 
 register_scheme("optimal", _make_optimal)
@@ -270,8 +454,10 @@ register_scheme("optimal_per_row", _make_optimal_per_row)
 register_scheme("uniform_n", _make_uniform_n)
 register_scheme("uniform_r", _make_uniform_r)
 register_scheme("uniform_r_group_code", _make_uniform_r)
-register_scheme("reisizadeh", lambda **_: Reisizadeh())
-register_scheme("uncoded", lambda **_: Uncoded())
+register_scheme("reisizadeh", lambda: Reisizadeh())
+register_scheme("uncoded", lambda: Uncoded())
+register_scheme("comm_aware", _make_comm_aware)
+register_scheme("comm_uniform", _make_comm_uniform)
 
 
 def scheme_for_plan(plan) -> AllocationScheme:
@@ -302,6 +488,10 @@ def scheme_for_plan(plan) -> AllocationScheme:
         return UniformN(n=float(plan.n))
     if tag in ("uniform_r", "uniform_r_group_code"):
         return UniformR(r=int(round(plan.k / float(loads[0]))))
+    if tag == "comm_uniform":
+        # transfer costs are not recorded on legacy plans; keep the code
+        # size so the redundancy survives, default the costs
+        return CommUniform(n=float(plan.n))
     return make_scheme(tag)
 
 
@@ -311,4 +501,7 @@ SCHEME_PARAM_DOC: Mapping[str, str] = {
     "uniform_r": "r: completion count (int in (0, N))",
     "reisizadeh": "(no params; per-row model)",
     "uncoded": "(no params)",
+    "comm_aware": "upload, download: transfer costs >= 0 "
+                  "(divided by ClusterSpec group bandwidths)",
+    "comm_uniform": "n: code size (default: comm-aware n*); upload, download",
 }

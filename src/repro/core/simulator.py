@@ -28,6 +28,7 @@ from repro.core.allocation import AllocationPlan
 from repro.core.runtime_model import (
     ClusterSpec,
     LatencyModel,
+    comm_terms,
     expand_groups,
     resolve_latency_model,
     sample_worker_times,
@@ -38,10 +39,11 @@ from repro.core.runtime_model import (
     jax.jit, static_argnames=("num_trials", "model", "k")
 )
 def _threshold_latency(
-    key, loads_w, mus_w, alphas_w, k, num_trials, model
+    key, loads_w, mus_w, alphas_w, shift_w, k, num_trials, model
 ):
     times = sample_worker_times(
-        key, loads_w, mus_w, alphas_w, k, num_trials, model=model
+        key, loads_w, mus_w, alphas_w, k, num_trials, model=model,
+        shift_per_worker=shift_w,
     )
     order = jnp.argsort(times, axis=1)
     sorted_times = jnp.take_along_axis(times, order, axis=1)
@@ -76,9 +78,52 @@ def simulate_threshold(
         loads_w.astype(jnp.float32),
         mus_w.astype(jnp.float32),
         alphas_w.astype(jnp.float32),
+        jnp.zeros_like(loads_w, dtype=jnp.float32),
         k,
         num_trials,
         model,
+    )
+
+
+def simulate_comm_threshold(
+    key,
+    cluster: ClusterSpec,
+    loads_per_group,
+    k: int,
+    num_trials: int = 10_000,
+    *,
+    upload: float = 1.0,
+    download: float = 1.0,
+):
+    """Latency samples under the CommDelay model (arXiv:2109.11246).
+
+    Completion times are compute + transfer: the fixed input-broadcast
+    shift ``upload/b_j`` is added per worker and the per-load download
+    cost ``download/b_j`` is folded into ``alpha_j`` (see
+    ``runtime_model.comm_terms``); the master semantics are unchanged —
+    collect until the finished workers cover k coded rows. Zero-load
+    workers (groups excluded by the comm-aware optimum) contribute rows
+    at their transfer shift but cover nothing, so they never advance the
+    threshold. With all-infinite bandwidths this is exactly
+    ``simulate_threshold`` under ``MODEL_1``.
+    """
+    shift_g, dalpha_g = comm_terms(cluster, upload, download)
+    loads_w = expand_groups(cluster, loads_per_group)
+    mus_w = expand_groups(cluster, [g.mu for g in cluster.groups])
+    alphas_w = expand_groups(
+        cluster,
+        [g.alpha + d for g, d in zip(cluster.groups, dalpha_g)],
+    )
+    shift_w = expand_groups(cluster, shift_g)
+    return _threshold_latency(
+        key,
+        loads_w.astype(jnp.float32),
+        mus_w.astype(jnp.float32),
+        alphas_w.astype(jnp.float32),
+        shift_w.astype(jnp.float32),
+        k,
+        num_trials,
+        LatencyModel.COMM_DELAY,
     )
 
 

@@ -170,12 +170,9 @@ def coded_head_record(config: ModelConfig, cluster: ClusterSpec, *,
     }
 
 
-def _parse_cluster(groups: str) -> ClusterSpec:
-    """'6:2.0,6:0.5' -> ClusterSpec (same syntax as launch/serve.py)."""
-    pairs = [p.split(":") for p in groups.split(",")]
-    return ClusterSpec.make(
-        [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
-    )
+def _parse_cluster(groups: str, bandwidth: float | None = None) -> ClusterSpec:
+    """'6:2.0,6:0.5[:bw]' -> ClusterSpec (same syntax as launch/serve.py)."""
+    return ClusterSpec.parse(groups, bandwidth)
 
 
 def model_flops(config: ModelConfig, shape: ShapeConfig) -> float:
@@ -531,11 +528,25 @@ def main():
                     help="code size n for --coded-scheme uniform_n")
     ap.add_argument("--coded-r", type=int, default=None,
                     help="completion count r for --coded-scheme uniform_r")
+    ap.add_argument("--coded-bandwidth", type=float, default=None,
+                    help="link bandwidth for --coded-groups entries without "
+                         "an explicit N:mu:bw value (default: infinite)")
+    ap.add_argument("--coded-upload", type=float, default=None,
+                    help="fixed transfer cost for --coded-scheme comm_aware "
+                         "/ comm_uniform")
+    ap.add_argument("--coded-download", type=float, default=None,
+                    help="per-row transfer cost for --coded-scheme "
+                         "comm_aware / comm_uniform")
     args = ap.parse_args()
     # resolve cluster + scheme up front so bad params fail before any compile
-    coded_cluster = _parse_cluster(args.coded_groups) if args.coded_groups else None
+    coded_cluster = (
+        _parse_cluster(args.coded_groups, args.coded_bandwidth)
+        if args.coded_groups
+        else None
+    )
     coded_scheme = (
-        make_scheme(args.coded_scheme, n=args.coded_n, r=args.coded_r)
+        make_scheme(args.coded_scheme, n=args.coded_n, r=args.coded_r,
+                    upload=args.coded_upload, download=args.coded_download)
         if coded_cluster is not None
         else None
     )

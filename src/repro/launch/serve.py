@@ -33,13 +33,23 @@ def main():
     ap.add_argument("--coded", action="store_true",
                     help="serve logits through the coded LM head")
     ap.add_argument("--groups", default="6:2.0,6:0.5",
-                    help="heterogeneous fleet as N:mu pairs")
+                    help="heterogeneous fleet as N:mu or N:mu:bandwidth "
+                         "groups (bandwidth feeds the comm-delay schemes)")
+    ap.add_argument("--bandwidth", type=float, default=None,
+                    help="link bandwidth for groups without an explicit "
+                         "per-group value (default: infinite = comm-free)")
     ap.add_argument("--scheme", default="optimal", choices=scheme_names(),
                     help="registered allocation scheme for the coded head")
     ap.add_argument("--scheme-n", type=float, default=None,
-                    help="code size n for --scheme uniform_n")
+                    help="code size n for --scheme uniform_n / comm_uniform")
     ap.add_argument("--scheme-r", type=int, default=None,
                     help="completion count r for --scheme uniform_r")
+    ap.add_argument("--comm-upload", type=float, default=None,
+                    help="fixed per-round transfer cost for --scheme "
+                         "comm_aware / comm_uniform (divided by bandwidth)")
+    ap.add_argument("--comm-download", type=float, default=None,
+                    help="per-row transfer cost for --scheme comm_aware / "
+                         "comm_uniform (divided by bandwidth)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the coded block mix through the Pallas "
                          "coded_matvec kernel")
@@ -55,12 +65,12 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0))
 
     cluster = None
-    scheme = make_scheme(args.scheme, n=args.scheme_n, r=args.scheme_r)
+    scheme = make_scheme(
+        args.scheme, n=args.scheme_n, r=args.scheme_r,
+        upload=args.comm_upload, download=args.comm_download,
+    )
     if args.coded:
-        pairs = [p.split(":") for p in args.groups.split(",")]
-        cluster = ClusterSpec.make(
-            [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
-        )
+        cluster = ClusterSpec.parse(args.groups, args.bandwidth)
     server = Server(
         model, params, cluster,
         ServeConfig(max_decode_steps=args.max_new, scheme=scheme,

@@ -106,7 +106,10 @@ class StragglerTracker:
             start += g.num_workers
             alive = int(np.sum(self._missed[sl] < self.fail_after))
             if alive > 0:
-                groups.append(GroupSpec(alive, float(self._mu[j]), float(self._alpha[j])))
+                # keep the group's link bandwidth: comm-aware schemes
+                # must not silently degenerate to comm-blind on replan
+                groups.append(GroupSpec(alive, float(self._mu[j]),
+                                        float(self._alpha[j]), g.bandwidth))
         return ClusterSpec(tuple(groups))
 
 

@@ -39,7 +39,12 @@ import numpy as np
 from repro.core.coding import decode_systematic_jit
 from repro.core.engine import CodedComputeEngine
 from repro.core.planner import DeploymentPlan
-from repro.core.runtime_model import ClusterSpec, sample_worker_times
+from repro.core.runtime_model import (
+    ClusterSpec,
+    LatencyModel,
+    comm_terms,
+    sample_worker_times,
+)
 from repro.core.schemes import AllocationScheme
 from repro.models.model import DTYPES_LOGITS, Model, padded_vocab
 
@@ -99,8 +104,23 @@ class CodedLMHead:
         self._mus_w = jnp.asarray(
             [self.plan.cluster.groups[j].mu for j in self.plan.group_of_worker]
         )
+        # comm-delay schemes: fold the per-load download cost into alpha
+        # and add the fixed transfer shift, so sampled times stay
+        # commensurate with the comm-aware deadline
+        sch = self.engine.scheme
+        if sch.latency_model is LatencyModel.COMM_DELAY:
+            shift_g, dal_g = comm_terms(
+                self.plan.cluster, sch.upload, sch.download
+            )
+        else:
+            ng = self.plan.cluster.num_groups
+            shift_g, dal_g = np.zeros(ng), np.zeros(ng)
         self._alphas_w = jnp.asarray(
-            [self.plan.cluster.groups[j].alpha for j in self.plan.group_of_worker]
+            [self.plan.cluster.groups[j].alpha + dal_g[j]
+             for j in self.plan.group_of_worker]
+        )
+        self._shift_w = jnp.asarray(
+            [shift_g[j] for j in self.plan.group_of_worker], jnp.float32
         )
 
     # ------------------------------------------------------ jit pipeline
@@ -114,6 +134,7 @@ class CodedLMHead:
         t = sample_worker_times(
             key, self._loads_w, self._mus_w, self._alphas_w, self.kb, 1,
             model=self.engine.scheme.latency_model,
+            shift_per_worker=self._shift_w,
         )[0]
         return t <= deadline
 

@@ -1,0 +1,253 @@
+"""CommDelay model + CommAware/CommUniform scheme tests.
+
+Covers the ISSUE-3 limit criteria: bandwidth -> inf recovers Optimal's
+allocation and T* exactly (the Lambert-W fast path), the numeric
+deadline solve satisfies its defining equation, the download-only case
+cross-checks against the closed form at comm-shifted alphas, and the
+Monte-Carlo mean tracks the comm-augmented lower bound.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    CodedComputeEngine,
+    CommAware,
+    CommUniform,
+    Optimal,
+    comm_aware_allocation,
+    comm_t_star,
+    optimal_allocation,
+)
+from repro.core.allocation import comm_deadline_terms
+from repro.core.planner import deploy, replan_on_membership_change
+from repro.core.runtime_model import comm_terms
+from repro.core.simulator import simulate_comm_threshold, simulate_threshold
+from repro.runtime.fault_tolerance import deadline_for
+
+KEY = jax.random.PRNGKey(3)
+K = 2_000
+
+
+def finite_bw_cluster() -> ClusterSpec:
+    # fast compute behind slow links (the adversarial case)
+    return ClusterSpec.make(
+        [40, 80, 40], [4.0, 1.0, 0.5], 1.0, [1.0, 4.0, 16.0]
+    )
+
+
+# ------------------------------------------------------ limit: b -> inf
+def test_infinite_bandwidth_recovers_optimal_exactly():
+    """The ISSUE-3 analytic cross-check: with free links the comm-aware
+    plan IS Theorem 2's — same loads array, same T*, bit for bit."""
+    c = ClusterSpec.make([6, 10, 8], [4.0, 1.0, 0.4], 1.0)  # bw defaults inf
+    comm = CommAware().allocate(c, K)
+    opt = Optimal().allocate(c, K)
+    np.testing.assert_array_equal(comm.loads, opt.loads)
+    np.testing.assert_array_equal(comm.loads_int, opt.loads_int)
+    assert comm.t_star == opt.t_star
+    assert comm.n == opt.n
+    assert comm.scheme == "comm_aware"  # tag still the scheme's own
+
+
+def test_zero_transfer_costs_recover_optimal_exactly():
+    """upload = download = 0 kills the comm terms even on finite links."""
+    c = finite_bw_cluster()
+    comm = CommAware(upload=0.0, download=0.0).allocate(c, K)
+    opt = Optimal().allocate(c, K)
+    np.testing.assert_array_equal(comm.loads, opt.loads)
+    assert comm.t_star == opt.t_star
+
+
+def test_large_bandwidth_converges_to_optimal():
+    """T*(b) -> T* monotonically from above as every link speeds up."""
+    base = ClusterSpec.make([40, 80, 40], [4.0, 1.0, 0.5], 1.0)
+    t_opt = float(Optimal().allocate(base, K).t_star)
+    prev = np.inf
+    for b in [1.0, 10.0, 100.0, 1e4, 1e8]:
+        t_b = comm_t_star(base.with_bandwidths(b), 1.0, 1.0)
+        assert t_opt < t_b < prev + 1e-15, (b, t_b)
+        prev = t_b
+    assert prev == pytest.approx(t_opt, rel=1e-6)
+
+
+# ----------------------------------------------------- numeric optimum
+def test_numeric_deadline_solves_defining_equation():
+    """Bisection root satisfies sum_j g_j (t - c_j)_+ = 1 to ~1e-12."""
+    c = finite_bw_cluster()
+    t = comm_t_star(c, 2.0, 1.0)
+    cc, g, _ = comm_deadline_terms(c, 2.0, 1.0)
+    residual = float(np.sum(g * np.maximum(t - cc, 0.0))) - 1.0
+    assert abs(residual) < 1e-9
+
+
+def test_download_only_matches_closed_form_at_shifted_alphas():
+    """With upload = 0 the comm optimum is Theorem 2 at alpha + d/b:
+    the Lambert-W fast path must agree with optimal_allocation on the
+    alpha-shifted cluster (analytic cross-check of the comm terms)."""
+    c = finite_bw_cluster()
+    d = 1.5
+    comm = comm_aware_allocation(c, K, upload=0.0, download=d)
+    shifted = ClusterSpec.make(
+        [g.num_workers for g in c.groups],
+        [g.mu for g in c.groups],
+        [g.alpha + d / g.bandwidth for g in c.groups],
+    )
+    opt = optimal_allocation(shifted, K)
+    np.testing.assert_allclose(comm.loads, opt.loads, rtol=1e-9)
+    assert comm.t_star == pytest.approx(opt.t_star, rel=1e-9)
+
+
+def test_slow_links_excluded_and_deadline_equation_feasible():
+    """A group whose transfer shift exceeds the optimal deadline gets
+    zero load — the qualitative change vs the comm-blind optimum."""
+    c = ClusterSpec.make(
+        [20, 20], [1.0, 4.0], 1.0, [10.0, 0.01]  # group 2: fast CPU, dead link
+    )
+    plan = comm_aware_allocation(c, K, upload=1.0, download=1.0)
+    assert plan.loads[1] == 0.0 and plan.loads_int[1] == 0
+    assert plan.loads[0] > 0
+    assert plan.n_int >= K  # still a feasible code
+    # the comm-blind optimum loads BOTH groups (it cannot see the link)
+    blind = optimal_allocation(c, K)
+    assert np.all(blind.loads > 0)
+
+
+# ------------------------------------------------------- MC vs bound
+def test_monte_carlo_tracks_comm_bound():
+    """MC mean within tolerance of the comm-augmented lower bound
+    (ISSUE-3: simulator Monte-Carlo mean vs analytic bound)."""
+    c = ClusterSpec.make(
+        [100, 200, 100], [4.0, 1.0, 0.5], 1.0, [0.5, 2.0, 8.0]
+    )
+    scheme = CommAware()
+    plan = scheme.allocate(c, 10_000)
+    lat = float(np.mean(np.asarray(
+        scheme.simulate(KEY, c, plan, num_trials=4000)
+    )))
+    assert lat >= plan.t_star * (1 - 0.02)
+    assert lat == pytest.approx(plan.t_star, rel=0.10)
+
+
+def test_comm_simulation_reduces_to_threshold_on_free_links():
+    """simulate_comm_threshold == simulate_threshold when bandwidth=inf
+    (same key, same samples — the shift is exactly zero)."""
+    c = ClusterSpec.make([6, 10], [4.0, 1.0], 1.0)
+    loads = [30.0, 20.0]
+    a = simulate_comm_threshold(KEY, c, loads, K, 512)
+    b = simulate_threshold(KEY, c, loads, K, num_trials=512)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_comm_shift_lower_bounds_every_sample():
+    """No completion can beat the fixed transfer shift of the fastest
+    active group."""
+    c = ClusterSpec.make([8, 8], [4.0, 1.0], 1.0, [0.5, 0.25])
+    upload = 2.0
+    shift, _ = comm_terms(c, upload, 1.0)
+    lat = np.asarray(
+        simulate_comm_threshold(KEY, c, [100.0, 100.0], K, 512, upload=upload)
+    )
+    assert np.all(lat >= shift.min() - 1e-6)
+
+
+# --------------------------------------------------- scheme mechanics
+def test_comm_uniform_defaults_to_comm_aware_code_size():
+    c = finite_bw_cluster()
+    aware = CommAware().allocate(c, K)
+    uni = CommUniform().allocate(c, K)
+    assert uni.n == pytest.approx(aware.n)
+    assert np.ptp(uni.loads) == 0  # uniform split over every group
+    assert np.isnan(uni.t_star)  # no closed form -> MC fallback paths
+
+
+def test_comm_uniform_explicit_n_respected():
+    c = finite_bw_cluster()
+    uni = CommUniform(n=3_000.0).allocate(c, K)
+    assert uni.n == pytest.approx(3_000.0)
+
+
+def test_invalid_comm_params_rejected():
+    with pytest.raises(ValueError):
+        CommAware(upload=-1.0)
+    with pytest.raises(ValueError):
+        CommUniform(n=-5.0)
+    with pytest.raises(ValueError):
+        ClusterSpec.make([4], [1.0], 1.0, [0.0])  # bandwidth must be > 0
+
+
+def test_engine_replan_deadline_with_comm_scheme():
+    """comm_aware is usable from every layer with no dispatch edits:
+    engine lifecycle, elastic replan (params + bandwidths preserved),
+    and the fault-tolerance deadline."""
+    c = finite_bw_cluster()
+    eng = CodedComputeEngine(
+        c, K, "comm_aware", scheme_params={"upload": 2.0, "download": 0.5}
+    )
+    assert eng.scheme == CommAware(upload=2.0, download=0.5)
+    assert np.isfinite(eng.t_star)
+    lat = eng.expected_latency(KEY, num_trials=500)
+    assert np.isfinite(lat) and lat > 0
+    d = eng.deadline(num_trials=500)
+    assert np.isfinite(d) and d > 0
+
+    groups = list(c.groups)
+    groups[1] = dataclasses.replace(groups[1], num_workers=60)
+    plan2 = eng.replan(ClusterSpec(tuple(groups)))
+    assert plan2.scheme_obj == CommAware(upload=2.0, download=0.5)
+    assert plan2.num_workers == 140
+    assert deadline_for(plan2, num_trials=500) > 0
+
+
+def test_bare_allocation_plans_keep_transfer_costs():
+    """Regression: plans built from the bare comm allocation functions
+    must carry their transfer costs — scheme_for_plan used to rebuild
+    them with DEFAULT costs (upload=download=1.0), so a later replan or
+    deadline silently used the wrong comm model."""
+    from repro.core import scheme_for_plan
+    from repro.core.planner import integerize
+
+    c = finite_bw_cluster()
+    plan = comm_aware_allocation(c, K, upload=5.0, download=5.0)
+    got = scheme_for_plan(plan)
+    assert got == CommAware(upload=5.0, download=5.0)
+    dep = integerize(c, plan)
+    dep2 = replan_on_membership_change(
+        dep, ClusterSpec.make([40, 80], [4.0, 1.0], 1.0, [1.0, 4.0])
+    )
+    assert dep2.scheme_obj == CommAware(upload=5.0, download=5.0)
+
+    from repro.core import comm_uniform_allocation
+
+    uni = comm_uniform_allocation(c, K, n=3_000.0, upload=2.0, download=0.0)
+    assert scheme_for_plan(uni) == CommUniform(n=3_000.0, upload=2.0,
+                                               download=0.0)
+
+
+def test_straggler_tracker_preserves_bandwidths_on_replan():
+    """Regression: estimated_cluster() used to rebuild GroupSpec without
+    the bandwidth field, so an on_estimates_update replan silently
+    loaded excluded slow-link groups again (comm-blind degeneration)."""
+    from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
+
+    c = ClusterSpec.make([20, 20], [1.0, 4.0], 1.0, [10.0, 0.01])
+    ctl = ElasticController(c, K, scheme="comm_aware")
+    assert ctl.plan.allocation.loads[1] == 0.0  # dead link excluded
+    tracker = StragglerTracker(c)
+    assert tracker.estimated_cluster().bandwidths.tolist() == [10.0, 0.01]
+    plan2 = ctl.on_estimates_update(tracker)
+    assert plan2.allocation.loads[1] == 0.0  # still excluded after replan
+
+
+def test_cluster_parse_bandwidth_syntax():
+    """CLI group syntax shared by launch/serve.py and launch/dryrun.py."""
+    c = ClusterSpec.parse("6:2.0,6:0.5")
+    assert c.total_workers == 12
+    assert np.all(np.isinf(c.bandwidths))
+    c2 = ClusterSpec.parse("6:2.0:8.0,6:0.5", 2.0)
+    assert c2.bandwidths.tolist() == [8.0, 2.0]
+    with pytest.raises(ValueError):
+        ClusterSpec.parse("6:2.0:8.0:9.0")

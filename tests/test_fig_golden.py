@@ -1,0 +1,145 @@
+"""Golden-value regression tests for the fig2–fig9 + fig_comm drivers.
+
+Each benchmark driver runs through its real ``run()`` entry point —
+closed-form figures (fig2/3/6) at the paper's own settings, Monte-Carlo
+figures (fig4/5/7/8/9, fig_comm) on tiny seeded clusters via the run()
+keyword params — and the tests assert the scheme latency ORDERING the
+paper claims (optimal <= uniform_n* <= uncoded, bounds respected) plus a
+few frozen closed-form values. Fast by construction (seconds, no
+compile-heavy cells), so they run in the CI fast lane — deliberately NOT
+marked ``slow``.
+
+Artifacts are redirected to a tmp dir so running the tests never
+clobbers ``artifacts/bench/``.
+"""
+import numpy as np
+import pytest
+
+import benchmarks.common as bench_common
+
+# tolerance for MC-vs-MC ordering assertions on tiny clusters
+MC_SLACK = 1.05
+
+
+@pytest.fixture(autouse=True)
+def _redirect_artifacts(tmp_path, monkeypatch):
+    monkeypatch.setattr(bench_common, "ARTIFACTS", str(tmp_path))
+
+
+def test_fig2_theta_one_over_n_golden():
+    from benchmarks import fig2
+
+    rec = fig2.run(verbose=False)
+    # T* = Theta(1/N): N*T* identical across x1/x2/x4 cluster scalings
+    assert rec["theta_1_over_N"]
+    np.testing.assert_allclose(
+        rec["N_invariance"], rec["N_invariance"][0], rtol=1e-9
+    )
+    # frozen closed-form value at q=1 (paper setting, Lambert-W math)
+    q1 = next(r for r in rec["rows"] if abs(r["q"] - 1.0) < 1e-9)
+    assert q1["N*T*"] == pytest.approx(3.4968381270239273, rel=1e-9)
+    # monotone decreasing in q (faster workers -> lower latency)
+    vals = [r["N*T*"] for r in rec["rows"]]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_fig3_rate_nonmonotone_golden():
+    from benchmarks import fig3
+
+    rec = fig3.run(verbose=False)
+    # the paper's counter-intuitive claim: rate NOT monotone in mu2
+    assert rec["nonmonotone_exists"]
+    n2_100 = next(r for r in rec["rows"] if r["N2"] == 100)
+    assert not n2_100["monotone"]
+    assert n2_100["rate_min"] == pytest.approx(0.5809321649804432, rel=1e-9)
+    assert n2_100["rate_max"] == pytest.approx(0.8732432178369728, rel=1e-9)
+
+
+def test_fig6_rate_limits_golden():
+    from benchmarks import fig6
+
+    rec = fig6.run(verbose=False)
+    # rate ~1/2 on the mid-q plateau, ~0.99 at q = 10^1.5 (paper claims)
+    assert all(0.4 <= r <= 0.65 for r in rec["rate_near_half_mid_q"])
+    assert rec["rate_at_large_q"] == pytest.approx(0.9894349048369616,
+                                                   rel=1e-9)
+
+
+def test_fig4_ordering_tiny():
+    from benchmarks import fig4
+
+    rec = fig4.run(verbose=False, ns=[50, 100], trials=800, k=2_000,
+                   r_fixed=10)
+    for row in rec["rows"]:
+        # the paper's Fig-4 ordering at every N
+        assert row["proposed"] <= row["uniform_n*"] * MC_SLACK, row
+        assert row["uniform_n*"] <= row["uncoded"] * MC_SLACK, row
+        assert row["proposed"] >= row["lower_bound_T*"] * 0.95, row
+        assert row["group_code_r100"] >= row["group_code_floor"], row
+    # latency shrinks as the fleet grows
+    assert rec["rows"][1]["proposed"] < rec["rows"][0]["proposed"]
+
+
+def test_fig5_ordering_tiny():
+    from benchmarks import fig5
+
+    rec = fig5.run(verbose=False, n_total=100, qs=[0.1, 1.0], trials=800,
+                   k=2_000, r_fixed=10)
+    for row in rec["rows"]:
+        assert row["proposed"] <= row["uniform_n*"] * MC_SLACK, row
+        assert row["uniform_n*"] <= row["uncoded"] * MC_SLACK, row
+        assert row["proposed"] >= row["T*"] * 0.95, row
+    # latency decreases in q (mu scale): faster workers, lower latency
+    assert rec["rows"][1]["proposed"] < rec["rows"][0]["proposed"]
+
+
+def test_fig7_proposed_beats_uniform_rates_tiny():
+    from benchmarks import fig7
+
+    rec = fig7.run(verbose=False, n_total=100, qs=[1.0], trials=800,
+                   k=2_000)
+    row = rec["rows"][0]
+    rate_cols = [v for key, v in row.items() if key.startswith("rate_")]
+    assert row["proposed"] <= min(rate_cols) * MC_SLACK
+    assert row["proposed"] <= row["uniform_n*"] * MC_SLACK
+
+
+def test_fig8_proposed_beats_best_uniform_tiny():
+    from benchmarks import fig8
+    from repro.core import ClusterSpec
+
+    rec = fig8.run(
+        verbose=False,
+        cluster=ClusterSpec.make([30, 60], [4.0, 0.5], 1.0),
+        rates=[0.45, 0.6, 0.75, 0.9],
+        trials=800,
+        k=2_000,
+    )
+    assert rec["proposed"] <= rec["best_uniform_latency"] * MC_SLACK
+    assert 0 <= rec["reduction_vs_best_uniform"] < 1
+
+
+def test_fig9_matches_reisizadeh_tiny():
+    from benchmarks import fig9
+
+    rec = fig9.run(verbose=False, ns=[100, 200], trials=800, k=2_000)
+    for row in rec["rows"]:
+        # Corollary 2 achieves the bound and coincides with [32]
+        assert row["ours_cor2"] >= row["T*_b"] * 0.95, row
+        assert row["ours_cor2"] == pytest.approx(row["reisizadeh"], rel=0.1)
+    assert rec["rows"][1]["ours_cor2"] < rec["rows"][0]["ours_cor2"]
+
+
+def test_fig_comm_ordering_tiny():
+    from benchmarks import fig_comm
+
+    rec = fig_comm.run(verbose=False, bs=[0.3, 30.0], trials=800)
+    assert rec["aware_never_loses_to_blind"]
+    assert rec["infinite_bandwidth_matches_optimal"]
+    assert rec["slow_links_excluded_at_low_b"]
+    low, high = rec["rows"]
+    # comm-awareness matters most when links are slow
+    assert low["gain_vs_blind"] > high["gain_vs_blind"] > 1.0
+    for row in rec["rows"]:
+        assert row["comm_aware"] >= row["bound"] * 0.95, row
+        assert row["comm_aware"] <= row["comm_uniform"] * MC_SLACK, row

@@ -1,0 +1,212 @@
+"""Property-based invariants over EVERY registered allocation scheme.
+
+Each test iterates ``scheme_names()`` (via pytest parametrization, plus
+hypothesis-randomized clusters when the library is installed), so future
+schemes registered through ``register_scheme`` are covered with zero
+test edits. Schemes whose factories require parameters are instantiated
+generically: ``make_scheme(name)`` first, then a canonical fallback
+value per accepted parameter (``scheme_params``) — no per-scheme
+special-casing.
+
+Invariants:
+* feasibility — real loads >= 0, integer loads are non-negative ints,
+  the deployed code always covers k (``n_int >= k``);
+* ``expected_latency >= lower_bound`` (for schemes with a finite bound);
+* ``replan`` preserves the scheme object (all params) exactly;
+* ``make_scheme(tag, **params)`` round-trips every scheme through its
+  own name tag.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (
+    ClusterSpec,
+    make_scheme,
+    scheme_names,
+    scheme_params,
+)
+from repro.core.planner import deploy, replan_on_membership_change
+
+KEY = jax.random.PRNGKey(7)
+K = 512
+
+# canonical fallback per ACCEPTED PARAM NAME (not per scheme name): any
+# future scheme that reuses these conventional params is instantiable
+# here without edits.
+PARAM_FALLBACKS = {
+    "n": lambda cluster, k: 1.5 * k,
+    "r": lambda cluster, k: max(1, cluster.total_workers // 2),
+}
+
+
+def instantiate(name: str, cluster: ClusterSpec, k: int):
+    """Build a scheme for ``name`` with no per-scheme knowledge."""
+    try:
+        return make_scheme(name)
+    except ValueError:
+        params = {
+            p: fb(cluster, k)
+            for p, fb in PARAM_FALLBACKS.items()
+            if p in scheme_params(name)
+        }
+        return make_scheme(name, **params)
+
+
+def base_cluster() -> ClusterSpec:
+    return ClusterSpec.make([6, 10, 8], [4.0, 1.0, 0.4], 1.0)
+
+
+def comm_cluster() -> ClusterSpec:
+    """Same groups behind finite links — exercises the comm-delay terms."""
+    return ClusterSpec.make([6, 10, 8], [4.0, 1.0, 0.4], 1.0, [8.0, 2.0, 0.5])
+
+
+CLUSTERS = {"free_links": base_cluster, "finite_links": comm_cluster}
+
+
+def check_feasibility(scheme, cluster, k):
+    plan = scheme.allocate(cluster, k)
+    assert plan.k == k
+    assert plan.scheme_obj is scheme
+    assert np.all(plan.loads >= 0), plan.loads
+    assert np.issubdtype(plan.loads_int.dtype, np.integer)
+    assert np.all(plan.loads_int >= 0)
+    assert np.all(plan.loads_int >= plan.loads - 1e-6)  # ceil, never floor
+    n_w = np.asarray([g.num_workers for g in cluster.groups], dtype=np.int64)
+    assert plan.n_int == int(np.sum(n_w * plan.loads_int))
+    assert plan.n_int >= k, f"{plan.scheme}: n_int={plan.n_int} < k={k}"
+    return plan
+
+
+def check_replan(scheme, cluster, k):
+    dep = deploy(scheme, cluster, k)
+    groups = list(cluster.groups)
+    if groups[0].num_workers > 1:
+        groups[0] = dataclasses.replace(
+            groups[0], num_workers=groups[0].num_workers - 1
+        )
+    new_cluster = ClusterSpec(tuple(groups))
+    dep2 = replan_on_membership_change(dep, new_cluster)
+    assert dep2.scheme_obj == scheme, dep.scheme
+    assert dep2.scheme == dep.scheme
+    assert dep2.num_workers == new_cluster.total_workers
+
+
+def check_tag_round_trip(scheme):
+    params = {
+        key: v
+        for key, v in dataclasses.asdict(scheme).items()
+        if v is not None
+    }
+    rebuilt = make_scheme(scheme.tag, **params)
+    assert rebuilt == scheme, (scheme, rebuilt)
+
+
+# ------------------------------------------------- deterministic sweep
+@pytest.mark.parametrize("cluster_kind", sorted(CLUSTERS))
+@pytest.mark.parametrize("name", scheme_names())
+def test_allocation_feasibility(name, cluster_kind):
+    cluster = CLUSTERS[cluster_kind]()
+    scheme = instantiate(name, cluster, K)
+    check_feasibility(scheme, cluster, K)
+
+
+@pytest.mark.parametrize("name", scheme_names())
+def test_expected_latency_dominates_lower_bound(name):
+    """MC mean >= the scheme's analytic bound (small MC-noise slack).
+
+    Schemes without an analytic bound (NaN t_star) are exempt — the
+    invariant is vacuous for them by construction.
+    """
+    cluster = comm_cluster()
+    scheme = instantiate(name, cluster, K)
+    bound = scheme.lower_bound(cluster, K)
+    if not np.isfinite(bound):
+        pytest.skip(f"{name} has no analytic lower bound")
+    lat = scheme.expected_latency(KEY, cluster, scheme.allocate(cluster, K),
+                                  num_trials=4000)
+    assert lat >= bound * (1 - 0.03), (name, lat, bound)
+
+
+@pytest.mark.parametrize("cluster_kind", sorted(CLUSTERS))
+@pytest.mark.parametrize("name", scheme_names())
+def test_replan_preserves_scheme_params(name, cluster_kind):
+    cluster = CLUSTERS[cluster_kind]()
+    scheme = instantiate(name, cluster, K)
+    check_replan(scheme, cluster, K)
+
+
+@pytest.mark.parametrize("name", scheme_names())
+def test_make_scheme_round_trips_through_tag(name):
+    scheme = instantiate(name, base_cluster(), K)
+    check_tag_round_trip(scheme)
+
+
+# ----------------------------------------------- hypothesis randomized
+def draw_cluster(data) -> ClusterSpec:
+    # min group size 3: the r = N/2 fallback must stay feasible (r < N-1)
+    # after check_replan removes a worker
+    g = data.draw(st.integers(1, 4), label="num_groups")
+    ns = [data.draw(st.integers(3, 24), label=f"N_{j}") for j in range(g)]
+    mus = [
+        data.draw(st.floats(0.25, 8.0, allow_nan=False), label=f"mu_{j}")
+        for j in range(g)
+    ]
+    alphas = [
+        data.draw(st.floats(0.25, 4.0, allow_nan=False), label=f"alpha_{j}")
+        for j in range(g)
+    ]
+    bws = [
+        data.draw(
+            st.one_of(st.just(float("inf")),
+                      st.floats(0.5, 50.0, allow_nan=False)),
+            label=f"bw_{j}",
+        )
+        for j in range(g)
+    ]
+    return ClusterSpec.make(ns, mus, alphas, bws)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data() if HAVE_HYPOTHESIS else st.nothing())
+def test_property_invariants_all_schemes(data):
+    """Feasibility + replan + tag round-trip on random heterogeneous
+    clusters (finite and infinite links), for every registered scheme."""
+    cluster = draw_cluster(data)
+    k = data.draw(st.sampled_from([64, 256, 1024]), label="k")
+    for name in scheme_names():
+        scheme = instantiate(name, cluster, k)
+        check_feasibility(scheme, cluster, k)
+        check_replan(scheme, cluster, k)
+        check_tag_round_trip(scheme)
+
+
+# ------------------------------------------------ strict make_scheme
+def test_make_scheme_rejects_unknown_kwargs():
+    """Regression: a typo'd param used to be silently swallowed by the
+    factories' ``**_`` catch-alls (``--scheme uniform_n --r 3`` no-oped);
+    now every scheme rejects parameters it does not declare."""
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scheme("uniform_n", n=700.0, r=3)
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scheme("uncoded", r=3)
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scheme("optimal", upload=1.0)
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scheme("comm_aware", n=100.0)
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scheme("uniform_r", r=8, totally_bogus=1)
+    # None means "not provided" (legacy callers pass the full trio)
+    assert make_scheme("uncoded", per_row=None, n=None, r=None).name == "uncoded"
+
+
+def test_scheme_params_exposes_accepted_params():
+    assert scheme_params("uniform_n") == ("n",)
+    assert scheme_params("comm_aware") == ("download", "upload")
+    assert scheme_params("uncoded") == ()
+    with pytest.raises(ValueError, match="unknown scheme"):
+        scheme_params("no_such_scheme")
