@@ -17,6 +17,7 @@ from benchmarks import (
     fig8,
     fig9,
     fig_comm,
+    fig_grad,
     roofline,
     serve_throughput,
 )
@@ -30,7 +31,7 @@ def main():
     mods = {
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
-        "fig_comm": fig_comm,
+        "fig_comm": fig_comm, "fig_grad": fig_grad,
         "roofline": roofline, "serve_throughput": serve_throughput,
     }
     names = args.only.split(",") if args.only else list(mods)

@@ -29,6 +29,7 @@ from repro.core.allocation import (
     comm_aware_allocation,
     comm_t_star,
     comm_uniform_allocation,
+    gradient_coding_allocation,
     optimal_allocation,
     optimal_r,
     reisizadeh_allocation,
@@ -57,6 +58,7 @@ from repro.core.schemes import (
     AllocationScheme,
     CommAware,
     CommUniform,
+    GradCoding,
     Optimal,
     Reisizadeh,
     Uncoded,
@@ -77,6 +79,7 @@ __all__ = [
     "CommAware",
     "CommUniform",
     "DeploymentPlan",
+    "GradCoding",
     "GroupSpec",
     "LatencyModel",
     "Optimal",
@@ -89,6 +92,7 @@ __all__ = [
     "comm_uniform_allocation",
     "deploy",
     "expected_order_stat",
+    "gradient_coding_allocation",
     "lambertw0",
     "lambertwm1",
     "make_scheme",

@@ -16,6 +16,10 @@ Implemented schemes
   exactly to ``optimal_allocation`` when every transfer term vanishes.
 * ``comm_uniform_allocation``   — uniform-split baseline under the same
   comm model (the comparison scheme of ``benchmarks/fig_comm.py``).
+* ``gradient_coding_allocation`` — Theorem-2 balancing applied to
+  gradient partitions (Wang et al. 2019, arXiv:1901.09339): same
+  equalized-finish-time loads, clamped to the partition count ``k``
+  (the coding itself lives in ``core/gradient_coding.py``).
 
 All functions are pure jnp (jittable, differentiable where meaningful)
 and operate on per-group arrays ``(N, mu, alpha)``; ``ClusterSpec`` from
@@ -410,6 +414,42 @@ def comm_uniform_allocation(
         scheme_obj=CommUniform(
             n=float(n), upload=float(upload), download=float(download)
         ),
+    )
+
+
+def gradient_coding_allocation(
+    cluster: ClusterSpec,
+    k: int,
+    *,
+    model: LatencyModel | None = None,
+) -> AllocationPlan:
+    """Theorem-2 load balancing applied to gradient partitions (Wang et
+    al. 2019, arXiv:1901.09339).
+
+    The global batch is split into ``k`` partitions; a group-j worker
+    computes ``l_j`` coded partition-gradients per step, and the master
+    needs any ``k`` coded rows to recover the full-batch gradient
+    (``core/gradient_coding.py``). The per-group balancing problem is
+    IDENTICAL to the paper's coded-matvec one — equalize the expected
+    per-group finish time under the shifted-exponential model — so the
+    loads are Theorem 2's, with one gradient-specific constraint: no
+    worker can usefully hold more than ``k`` partitions (computing the
+    whole batch), so loads are clamped to ``k``. The clamp only binds on
+    degenerate fleets (a near-solo worker); Theorem 2's ``T*`` remains a
+    valid lower bound either way.
+    """
+    model = resolve_latency_model(model)
+    plan = optimal_allocation(cluster, k, model=model)
+    loads = np.minimum(plan.loads, float(k))
+    loads_int = np.minimum(plan.loads_int, k)
+    n_w = np.asarray([g.num_workers for g in cluster.groups], dtype=np.int64)
+    return dataclasses.replace(
+        plan,
+        loads=loads,
+        loads_int=loads_int,
+        n=float(np.sum(n_w * loads)),
+        n_int=int(np.sum(n_w * loads_int)),
+        scheme="grad_coding_per_row" if model.per_row else "grad_coding",
     )
 
 

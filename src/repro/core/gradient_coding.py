@@ -1,0 +1,139 @@
+"""Gradient coding over batch partitions (Wang et al. 2019, arXiv:1901.09339).
+
+Heterogeneity-aware gradient coding assigns each worker a *fraction* of
+the gradient work proportional to its speed: the global batch is split
+into ``k`` partitions, worker ``w`` computes coded combinations of
+partition gradients, and the master recovers the FULL-batch gradient
+from whichever coded rows arrive by the deadline. The per-group loads
+come from the same Theorem-2 balancing the paper derives for coded
+matvec rows (``allocation.gradient_coding_allocation``); this module
+owns the coding itself:
+
+* **Assignment matrix** ``B in R^{n x k}`` — row ``i`` is the linear
+  combination of partition gradients coded row ``i`` carries. We use
+  the systematic-Gaussian construction shared with the matvec path
+  (``coding.make_generator``): the first ``k`` rows are plain partition
+  gradients, parity rows mix all partitions. Any ``k`` rows of ``B``
+  are linearly independent with probability 1 (MDS property), so any
+  ``k`` surviving coded gradients recover the batch gradient.
+
+* **Decode vectors** — gradient descent only needs the SUM of partition
+  gradients, never the individual partitions, so the master solves for
+  one vector ``a`` with ``a^T B_S = 1^T`` (support on the surviving
+  rows ``S``) and aggregates ``g = sum_i a_i g~_i`` directly: a single
+  ``(k, k)`` solve plus one weighted reduction, instead of a full
+  per-partition decode. With the survivors-first stable-argsort gather
+  of the serving pipeline this is fixed-shape and device-resident
+  (``decode_vector_jit``), composable under ``jax.lax.scan``/``jit``;
+  ``decode_vector`` is the numpy reference oracle.
+
+When no worker misses the deadline the gathered system is the identity
+(systematic rows) and the decode vector is EXACTLY ones on the
+systematic rows — coded training reproduces plain data-parallel
+training bit-for-bit modulo partition summation order
+(``tests/test_coded_train.py`` pins the parity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coding import make_generator
+
+
+def assignment_matrix(n: int, k: int, key=None, kind: str = "systematic_gaussian"):
+    """(n, k) gradient-coding assignment matrix B.
+
+    Row i holds the coefficients of the partition gradients coded
+    gradient i carries. Systematic by default: rows 0..k-1 are the plain
+    partition gradients (support 1), parity rows are dense Gaussian
+    mixes. The construction is shared with the coded-matvec generator so
+    serve and train ride one coding substrate.
+    """
+    return make_generator(n, k, key=key, kind=kind)
+
+
+def partition_weights(b_matrix, decode_vec) -> np.ndarray:
+    """Effective per-partition weights ``w = a^T B`` of a decode vector.
+
+    ``w == 1`` componentwise iff the decode is exact: the aggregated
+    gradient ``sum_i a_i g~_i`` equals ``sum_j w_j g_j``.
+    """
+    return np.asarray(decode_vec) @ np.asarray(b_matrix)
+
+
+def decode_vector(b_matrix, finished_rows) -> tuple[np.ndarray, bool]:
+    """Numpy oracle: decode vector a with ``a^T B_S = 1^T``.
+
+    Args:
+      b_matrix: (n, k) assignment matrix.
+      finished_rows: (n,) bool — coded gradients that arrived in time.
+
+    Returns (a, ok): a is (n,) with zeros on erased rows; ok is False
+    when fewer than k rows survived (a is zeroed — the caller skips the
+    step or falls back to the previous gradient).
+    """
+    b = np.asarray(b_matrix, np.float64)
+    fin = np.asarray(finished_rows, bool)
+    n, k = b.shape
+    a = np.zeros((n,), np.float64)
+    if fin.sum() < k:
+        return a, False
+    use = np.flatnonzero(fin)[:k]
+    coeff = np.linalg.solve(b[use].T, np.ones((k,)))
+    a[use] = coeff
+    return a, True
+
+
+@jax.jit
+def decode_vector_jit(b_matrix, finished_rows):
+    """Fixed-shape, device-resident decode vector (the training hot path).
+
+    Survivors-first stable argsort on the erasure mask (the same gather
+    as ``coding.decode_systematic_jit``) selects the first k surviving
+    rows ``B_S``; ``B_S^T a_S = 1`` is a static (k, k) LU solve with one
+    refinement step, and the coefficients scatter back to an (n,) vector
+    that is zero on every unused row. Returns (a, ok) with ``ok`` a
+    traced bool — the caller folds the fewer-than-k-survivors fallback
+    in with ``jnp.where``, never a Python branch.
+    """
+    b = jnp.asarray(b_matrix)
+    mask = jnp.asarray(finished_rows, bool)
+    n, k = b.shape
+    order = jnp.argsort(~mask, stable=True)
+    idx = order[:k]
+    bs_t = b[idx].T  # (k, k)
+    rhs = jnp.ones((k, 1), b.dtype)
+    lu, piv = jax.scipy.linalg.lu_factor(bs_t)
+    c = jax.scipy.linalg.lu_solve((lu, piv), rhs)
+    c = c + jax.scipy.linalg.lu_solve((lu, piv), rhs - bs_t @ c)  # refine
+    ok = jnp.sum(mask) >= k
+    a = jnp.zeros((n,), b.dtype).at[idx].set(c[:, 0])
+    return jnp.where(ok, a, jnp.zeros_like(a)), ok
+
+
+def aggregate_coded(coded_grads, decode_vec):
+    """Master-side aggregation ``g = sum_i a_i g~_i`` over a pytree.
+
+    ``coded_grads`` is a pytree whose leaves have a leading (n,) coded-row
+    axis; ``decode_vec`` is the (n,) decode vector (zeros on erasures).
+    Traceable — used by tests to cross-check the fused train-step path,
+    which folds ``a^T B`` into per-partition weights instead of
+    materializing the n coded gradient copies.
+    """
+    a = jnp.asarray(decode_vec)
+    return jax.tree.map(lambda g: jnp.tensordot(a, g, axes=1), coded_grads)
+
+
+def encode_gradients(partition_grads, b_matrix):
+    """Worker-side encoding ``g~_i = sum_j B[i, j] g_j`` over a pytree.
+
+    ``partition_grads`` leaves have a leading (k,) partition axis; the
+    result's leaves have a leading (n,) coded-row axis. Reference /
+    test helper: the fused train step never materializes this (it
+    weights partitions by ``a^T B`` directly — mathematically identical
+    because the coding is linear).
+    """
+    b = jnp.asarray(b_matrix)
+    return jax.tree.map(lambda g: jnp.tensordot(b, g, axes=1), partition_grads)

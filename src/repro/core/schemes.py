@@ -214,6 +214,37 @@ class Uncoded(AllocationScheme):
 
 
 @dataclasses.dataclass(frozen=True)
+class GradCoding(AllocationScheme):
+    """Heterogeneity-aware gradient coding (Wang et al., arXiv:1901.09339).
+
+    The training-side citizen of the registry: ``k`` is the number of
+    gradient PARTITIONS of the global batch, loads are coded
+    partition-gradients per worker (Theorem-2 balancing clamped to k —
+    ``allocation.gradient_coding_allocation``), and the master decodes
+    the full-batch gradient from any k surviving coded rows via the
+    decode vectors of ``core/gradient_coding.py``. Master semantics are
+    threshold decoding, so simulation/deadline/replan all come from the
+    base class unchanged.
+    """
+
+    name = "grad_coding"
+    model: LatencyModel = LatencyModel.MODEL_1
+
+    @property
+    def latency_model(self) -> LatencyModel:
+        return self.model
+
+    @property
+    def tag(self) -> str:
+        # like Optimal's per-row tag: a plan that loses its scheme_obj
+        # must reconstruct under the SAME latency model
+        return "grad_coding_per_row" if self.model.per_row else "grad_coding"
+
+    def _allocate(self, cluster: ClusterSpec, k: int) -> AllocationPlan:
+        return allocation.gradient_coding_allocation(cluster, k, model=self.model)
+
+
+@dataclasses.dataclass(frozen=True)
 class _CommDelayScheme(AllocationScheme):
     """Shared CommDelay behaviour: transfer-cost params + comm simulation.
 
@@ -449,7 +480,23 @@ def _make_comm_uniform(*, n=None, upload=None, download=None):
     return CommUniform(**kw)
 
 
+def _make_grad_coding(*, per_row=None, model=None):
+    return GradCoding(model=resolve_latency_model(model, per_row))
+
+
+def _make_grad_coding_per_row(*, per_row=None, model=None):
+    m = resolve_latency_model(model, per_row, default=LatencyModel.MODEL_30)
+    if m is not LatencyModel.MODEL_30:
+        raise ValueError(
+            "scheme 'grad_coding_per_row' is fixed to MODEL_30; use "
+            "'grad_coding' with model=MODEL_1 instead"
+        )
+    return GradCoding(model=LatencyModel.MODEL_30)
+
+
 register_scheme("optimal", _make_optimal)
+register_scheme("grad_coding", _make_grad_coding)
+register_scheme("grad_coding_per_row", _make_grad_coding_per_row)
 register_scheme("optimal_per_row", _make_optimal_per_row)
 register_scheme("uniform_n", _make_uniform_n)
 register_scheme("uniform_r", _make_uniform_r)
@@ -497,6 +544,8 @@ def scheme_for_plan(plan) -> AllocationScheme:
 
 SCHEME_PARAM_DOC: Mapping[str, str] = {
     "optimal": "model: LatencyModel (default MODEL_1)",
+    "grad_coding": "model: LatencyModel (default MODEL_1); "
+                   "k = gradient partitions of the global batch",
     "uniform_n": "n: total coded rows (float > 0)",
     "uniform_r": "r: completion count (int in (0, N))",
     "reisizadeh": "(no params; per-row model)",

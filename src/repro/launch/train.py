@@ -4,18 +4,22 @@ Runs a real training loop on the local devices (the production meshes
 are exercised by dryrun.py; this driver is sized for the end-to-end
 example: a ~100M-param model for a few hundred steps on CPU, or a real
 slice on accelerators). Supports checkpoint/restart (--resume picks up
-the latest step) and heterogeneity-aware batch splitting.
+the latest step) and coded execution: ``--hetero-groups`` plans a
+straggler fleet and runs gradient-coded training (``--scheme``, any
+registered allocation scheme; ``grad_coding`` by default — see
+DESIGN.md §5), with the per-round deadline/erasure machinery shared
+with the serving loop.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import scheme_names
 from repro.data import SyntheticLMData
 from repro.models.model import Model
 from repro.optim import AdamWConfig
@@ -26,7 +30,7 @@ from repro.runtime.train_loop import (
 )
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true",
@@ -41,9 +45,32 @@ def main():
                     help="resume from the latest checkpoint in --checkpoint-dir")
     ap.add_argument("--telemetry", default=None)
     ap.add_argument("--hetero-groups", default=None,
-                    help="e.g. '4:2.0,4:0.5' = N:mu pairs; prints the "
-                         "paper-optimal per-group batch split")
-    args = ap.parse_args()
+                    help="straggler fleet as N:mu[:bandwidth] groups, e.g. "
+                         "'4:2.0,4:0.5' — turns on coded training against "
+                         "this fleet (and prints the Theorem-2 batch split)")
+    ap.add_argument("--scheme", default=None, choices=scheme_names(),
+                    help="allocation scheme for coded training "
+                         "(default: grad_coding; requires --hetero-groups)")
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="gradient partitions k (must divide --batch; "
+                         "default: one per batch row)")
+    ap.add_argument("--deadline-safety", type=float, default=None,
+                    help="per-round deadline = expected latency x this "
+                         "(default: 3.0)")
+    args = ap.parse_args(argv)
+    if args.hetero_groups is None:
+        # coded flags must not silently no-op without a fleet to plan for
+        coded_flags = [
+            name for name, v in (("--scheme", args.scheme),
+                                 ("--partitions", args.partitions),
+                                 ("--deadline-safety", args.deadline_safety))
+            if v is not None
+        ]
+        if coded_flags:
+            raise SystemExit(
+                f"{', '.join(coded_flags)} require --hetero-groups "
+                f"(coded training needs a fleet to plan against)"
+            )
 
     config = get_arch(args.arch)
     if args.reduced:
@@ -52,11 +79,9 @@ def main():
     shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
     data = SyntheticLMData(config, shape)
 
+    cluster = None
     if args.hetero_groups:
-        pairs = [p.split(":") for p in args.hetero_groups.split(",")]
-        cluster = ClusterSpec.make(
-            [int(n) for n, _ in pairs], [float(m) for _, m in pairs]
-        )
+        cluster = ClusterSpec.parse(args.hetero_groups)
         split = heterogeneous_batch_split(cluster, args.batch)
         print(f"heterogeneity-aware batch split (Theorem 2): {split.tolist()} "
               f"over groups {[(g.num_workers, g.mu) for g in cluster.groups]}")
@@ -68,6 +93,12 @@ def main():
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         telemetry_path=args.telemetry,
+        cluster=cluster,
+        scheme=args.scheme or "grad_coding",
+        partitions=args.partitions,
+        deadline_safety=(
+            3.0 if args.deadline_safety is None else args.deadline_safety
+        ),
     )
     if args.checkpoint_dir and not args.resume:
         # fresh run: ignore stale checkpoints by training from step 0 only
@@ -84,11 +115,21 @@ def main():
     print(f"training {config.name}: {model.param_count():,} params, "
           f"{len(jax.devices())} device(s)")
     trainer = Trainer(model, data, opt_cfg, cfg)
+    if trainer.executor is not None:
+        plan = trainer.executor.plan
+        print(f"coded training: scheme={trainer.executor.scheme.name} "
+              f"k={trainer.partitions} n={plan.n} "
+              f"loads={plan.loads_per_worker.tolist()} "
+              f"deadline={trainer.executor.deadline:.4f}")
     params, _, history = trainer.run()
     if history:
         first, last = history[0], history[-1]
         print(f"loss {first['loss']:.4f} -> {last['loss']:.4f} "
               f"({cfg.steps} steps)")
+        if trainer.executor is not None:
+            skipped = sum(h.get("skipped", 0.0) for h in history)
+            print(f"coded rounds logged: {len(history)}, skipped steps "
+                  f"among them: {int(skipped)}")
     return params
 
 

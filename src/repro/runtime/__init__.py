@@ -1,14 +1,24 @@
-from repro.runtime.train_loop import Trainer, TrainConfig, make_train_step
-from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
+from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
+from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
+from repro.runtime.telemetry import Telemetry
+from repro.runtime.train_loop import (
+    TrainConfig,
+    Trainer,
+    make_coded_train_step_fn,
+    make_train_step,
+)
 
 __all__ = [
     "CodedLMHead",
+    "CodedRoundExecutor",
     "ElasticController",
     "ServeConfig",
     "Server",
     "StragglerTracker",
+    "Telemetry",
     "TrainConfig",
     "Trainer",
+    "make_coded_train_step_fn",
     "make_train_step",
 ]

@@ -1,0 +1,222 @@
+"""CodedRoundExecutor: the shared coded-execution substrate (DESIGN.md §5).
+
+Serving and training run the same per-round protocol — plan a coded
+deployment, derive a deadline, sample which workers make it, map worker
+erasures onto coded-slot erasures, decode, and re-plan when the fleet
+changes. Before this module the serving loop owned all of that
+(``CodedLMHead`` precomputed scatter maps and straggler parameters
+inline) and the training loop had none of it (host-side numpy helpers
+exercised only by tests). ``CodedRoundExecutor`` extracts the mechanics
+once:
+
+* **deadline** — the scheme's expected latency x safety, finite for
+  every registered scheme (``CodedComputeEngine.deadline``);
+* **erasure-mask sampling** — ``finish_mask_jit`` draws per-worker
+  round-trip times under the scheme's OWN latency model (comm-delay
+  shifts included) inside the caller's compiled program;
+* **worker->slot scatter map** — ``slot_owner[i]`` is the worker holding
+  coded slot ``i`` (rows for the matvec head, coded gradients for
+  training), so a (W,) finish mask gathers to an (n,) slot-erasure mask
+  in one device op;
+* **elastic replan** — ``replan``/``on_estimates_update`` rebuild the
+  plan, deadline and scatter map on a membership or estimate change,
+  scheme params riding on the engine's typed scheme object.
+
+``CodedLMHead`` (serve) and ``Trainer`` (train) both consume one; the
+registry/engine is therefore the single planning authority for every
+coded workload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import CodedComputeEngine
+from repro.core.planner import DeploymentPlan
+from repro.core.runtime_model import (
+    ClusterSpec,
+    LatencyModel,
+    comm_terms,
+    sample_worker_times,
+)
+from repro.core.schemes import AllocationScheme
+
+
+class CodedRoundExecutor:
+    """Per-round mechanics for one coded workload (serve OR train).
+
+    Device-resident state is recomputed on every (re)plan: the
+    worker->slot scatter map and the per-worker shifted-exponential
+    parameters the jitted finish-mask sampler draws from. All ``*_jit``
+    methods are traceable and safe to close over in a compiled program;
+    after a ``replan`` the consumer must rebuild anything traced against
+    the old shapes (worker count and slot count may change).
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        k: int,
+        scheme: str | AllocationScheme = "optimal",
+        *,
+        scheme_params: dict | None = None,
+        deadline_safety: float = 3.0,
+    ):
+        self.engine = CodedComputeEngine(
+            cluster, k, scheme, scheme_params=scheme_params
+        )
+        self.deadline_safety = float(deadline_safety)
+        self._refresh()
+
+    # ----------------------------------------------------------- plan state
+    def _refresh(self) -> None:
+        """Recompute deadline + device arrays from the engine's plan."""
+        plan = self.engine.plan
+        self.plan: DeploymentPlan = plan
+        self.deadline = self._integer_load_deadline(self.deadline_safety)
+        owner = np.zeros((plan.n,), np.int32)
+        for w, (s, e) in enumerate(plan.row_ranges):
+            owner[s:e] = w
+        #: (n,) worker index holding each coded slot
+        self.slot_owner = jnp.asarray(owner)
+        self._loads_w = jnp.asarray(plan.loads_per_worker, jnp.float32)
+        self._mus_w = jnp.asarray(
+            [plan.cluster.groups[j].mu for j in plan.group_of_worker]
+        )
+        # comm-delay schemes: fold the per-load download cost into alpha
+        # and add the fixed transfer shift, so sampled times stay
+        # commensurate with the comm-aware deadline
+        sch = self.engine.scheme
+        if sch.latency_model is LatencyModel.COMM_DELAY:
+            shift_g, dal_g = comm_terms(plan.cluster, sch.upload, sch.download)
+        else:
+            ng = plan.cluster.num_groups
+            shift_g, dal_g = np.zeros(ng), np.zeros(ng)
+        self._alphas_w = jnp.asarray(
+            [plan.cluster.groups[j].alpha + dal_g[j]
+             for j in plan.group_of_worker]
+        )
+        self._shift_w = jnp.asarray(
+            [shift_g[j] for j in plan.group_of_worker], jnp.float32
+        )
+
+    # convenience views ----------------------------------------------------
+    @property
+    def scheme(self) -> AllocationScheme:
+        return self.engine.scheme
+
+    @property
+    def cluster(self) -> ClusterSpec:
+        return self.plan.cluster
+
+    @property
+    def k(self) -> int:
+        return self.engine.k
+
+    @property
+    def n(self) -> int:
+        """Total coded slots deployed."""
+        return self.plan.n
+
+    @property
+    def num_workers(self) -> int:
+        return self.plan.num_workers
+
+    def generator(self, key=None, kind: str = "systematic_gaussian"):
+        """(n, k) MDS generator / assignment matrix sized to the plan."""
+        return self.engine.generator(key=key, kind=kind)
+
+    #: integer/real load ratio beyond which the analytic deadline is
+    #: distrusted and the deployment's integer loads are Monte-Carlo'd
+    INTEGERIZATION_SLACK = 1.05
+
+    def _integer_load_deadline(self, safety: float, *, key=None,
+                               num_trials: int = 2_048) -> float:
+        """Deadline commensurate with the INTEGERIZED deployment.
+
+        ``plan_deadline``'s analytic ``T*`` describes the real-valued
+        allocation, but ``finish_mask_jit`` samples the integer
+        per-worker loads that actually run; at small ``k`` (few gradient
+        partitions) the ``ceil`` can inflate a load several-fold and the
+        analytic deadline would erase every round. Policy: when the
+        integerization is benign (every ``ceil(l)/l`` within
+        ``INTEGERIZATION_SLACK`` — the serving case, where k is in the
+        thousands) keep ``plan_deadline``'s cheap analytic/MC-fallback
+        path so (re)plans stay closed-form in the failure path;
+        otherwise Monte-Carlo the scheme's expected latency ON the
+        integer loads, floored by the analytic bound.
+        """
+        plan = self.plan
+        alloc = plan.allocation
+        if alloc is not None:
+            real = np.asarray(alloc.loads, float)
+            live = real > 0
+            inflation = float(
+                np.max(alloc.loads_int[live] / real[live], initial=1.0)
+            )
+        else:  # legacy plan without the real-valued allocation attached
+            inflation = float("inf")
+        if inflation <= self.INTEGERIZATION_SLACK:
+            # PR-2 serving policy unchanged: analytic T* when the scheme
+            # has one, the scheme's own MC estimate otherwise
+            return self.engine.deadline(safety, key=key,
+                                        num_trials=num_trials)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        t = float(
+            self.engine.expected_latency(
+                key, num_trials, use_integer_loads=True
+            )
+        )
+        analytic = float(plan.t_star)
+        if np.isfinite(analytic):
+            t = max(t, analytic)
+        return t * safety
+
+    # ------------------------------------------------------- jitted methods
+    def finish_mask_jit(self, key, deadline=None):
+        """(W,) bool straggler mask, traceable (shifted-exp model).
+
+        Samples under the scheme's OWN latency model so the times are
+        commensurate with the deadline (which ``plan_deadline`` computes
+        under that same model — e.g. reisizadeh is per-row MODEL_30,
+        comm-aware adds per-worker transfer shifts). ``deadline`` may be
+        a traced scalar; defaults to the executor's planned one.
+        """
+        if deadline is None:
+            deadline = self.deadline
+        t = sample_worker_times(
+            key, self._loads_w, self._mus_w, self._alphas_w, self.k, 1,
+            model=self.engine.scheme.latency_model,
+            shift_per_worker=self._shift_w,
+        )[0]
+        return t <= deadline
+
+    def slot_mask_jit(self, worker_mask):
+        """Gather a (W,) worker finish mask to the (n,) slot-erasure mask."""
+        return jnp.asarray(worker_mask, bool)[self.slot_owner]
+
+    def sample_finish_mask(self, key) -> np.ndarray:
+        """Host-side convenience: one sampled mask at the planned deadline."""
+        return np.asarray(self.finish_mask_jit(key, self.deadline))
+
+    # ----------------------------------------------------------- elasticity
+    def replan(self, new_cluster: ClusterSpec) -> DeploymentPlan:
+        """Re-plan on a membership/estimate change; scheme params preserved.
+
+        Rebuilds the deadline, scatter map and sampling arrays. Consumers
+        holding compiled programs traced against the old worker/slot
+        shapes must rebuild them (both loops do).
+        """
+        plan = self.engine.replan(new_cluster)
+        self._refresh()
+        return plan
+
+    def on_estimates_update(self, tracker) -> DeploymentPlan:
+        """Replan from a ``StragglerTracker``'s current estimated cluster."""
+        return self.replan(tracker.estimated_cluster())
+
+    @property
+    def replans(self) -> int:
+        return self.engine.replans

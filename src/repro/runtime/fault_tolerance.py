@@ -6,7 +6,10 @@ the fleet-control pieces around it:
 
 * ``StragglerTracker`` — online (mu, alpha) estimation per group from
   observed round-trip times (shifted-exponential MLE, exponential
-  forgetting) and deadline-based failure detection.
+  forgetting), per-group link-bandwidth MLE from observed transfer
+  times (``observe_transfers`` -> ``ClusterSpec.with_bandwidths``, so
+  ``CommAware`` replans stop being comm-blind), and deadline-based
+  failure detection.
 * ``ElasticController`` — membership changes (workers join/leave, groups
   added on scale-up) trigger a closed-form re-plan (Theorem 2 is O(G) —
   no iterative optimizer in the failure path). Backed by a
@@ -63,6 +66,8 @@ class StragglerTracker:
         self._mu = np.asarray([g.mu for g in self.cluster.groups], float)
         self._alpha = np.asarray([g.alpha for g in self.cluster.groups], float)
         self._missed = np.zeros((self.cluster.total_workers,), int)
+        self._bw = self.cluster.bandwidths.copy()
+        self._bw_seen = np.zeros((self.cluster.num_groups,), bool)
 
     def observe_round(self, times: np.ndarray, loads: np.ndarray, k: int,
                       deadline: float | None = None):
@@ -93,24 +98,70 @@ class StragglerTracker:
             self._mu[j] = self.forget * self._mu[j] + (1 - self.forget) * mu_hat
         return finished
 
+    def observe_transfers(self, transfer_times: np.ndarray,
+                          payload: float = 1.0) -> np.ndarray:
+        """Per-group bandwidth MLE from observed per-worker transfer times.
+
+        Under the CommDelay model a group-j worker pays ``payload / b_j``
+        time units of transfer per round, so given observed transfer
+        times the MLE of the link bandwidth is ``payload / mean(t)``
+        (the transfer shift is deterministic in the model; averaging
+        de-noises real measurements). First observation replaces the
+        spec prior (often ``inf`` = "never measured"); later ones are
+        smoothed with the same exponential forgetting as (mu, alpha).
+        Estimates flow into ``estimated_cluster`` and from there into
+        elastic replans, so ``CommAware`` plans track measured links.
+
+        transfer_times: (N,) per-worker transfer times (np.nan/np.inf or
+        <= 0 for workers with no measurement this round). Returns the
+        current per-group bandwidth estimates.
+        """
+        t = np.asarray(transfer_times, float)
+        start = 0
+        for j, g in enumerate(self.cluster.groups):
+            tj = t[start:start + g.num_workers]
+            start += g.num_workers
+            tj = tj[np.isfinite(tj) & (tj > 0)]
+            if tj.size == 0:
+                continue
+            b_hat = float(payload / tj.mean())
+            if self._bw_seen[j] and np.isfinite(self._bw[j]):
+                self._bw[j] = (
+                    self.forget * self._bw[j] + (1 - self.forget) * b_hat
+                )
+            else:
+                self._bw[j] = b_hat
+            self._bw_seen[j] = True
+        return self._bw.copy()
+
+    @property
+    def bandwidth_estimates(self) -> np.ndarray:
+        """Current per-group bandwidth estimates (spec prior if unseen)."""
+        return self._bw.copy()
+
     @property
     def failed_workers(self) -> np.ndarray:
         return np.flatnonzero(self._missed >= self.fail_after)
 
     def estimated_cluster(self) -> ClusterSpec:
-        """Current membership (failed workers removed) + current estimates."""
-        groups = []
+        """Current membership (failed workers removed) + current estimates.
+
+        Carries the per-group bandwidth estimates via
+        ``ClusterSpec.with_bandwidths``: comm-aware schemes must not
+        silently degenerate to comm-blind on replan, and measured links
+        override the spec's static values.
+        """
+        groups, bws = [], []
         start = 0
         for j, g in enumerate(self.cluster.groups):
             sl = np.arange(start, start + g.num_workers)
             start += g.num_workers
             alive = int(np.sum(self._missed[sl] < self.fail_after))
             if alive > 0:
-                # keep the group's link bandwidth: comm-aware schemes
-                # must not silently degenerate to comm-blind on replan
                 groups.append(GroupSpec(alive, float(self._mu[j]),
-                                        float(self._alpha[j]), g.bandwidth))
-        return ClusterSpec(tuple(groups))
+                                        float(self._alpha[j])))
+                bws.append(float(self._bw[j]))
+        return ClusterSpec(tuple(groups)).with_bandwidths(bws)
 
 
 class ElasticController:

@@ -23,10 +23,13 @@ legacy per-token host loop (numpy ``np.linalg.solve`` decode) survives
 behind ``ServeConfig(jit_pipeline=False)`` as the reference/baseline
 path for ``benchmarks/serve_throughput.py``.
 
-Engine integration: ``ClusterSpec -> CodedComputeEngine(k=kb)`` owns the
-plan, the (nb, kb) generator and the deadline, so the per-worker block
-counts follow the configured ``AllocationScheme`` (Theorem 2 by default;
-any registered scheme via ``ServeConfig.scheme``).
+Substrate integration: the head's per-round mechanics — plan, (nb, kb)
+generator, deadline, straggler-mask sampling, worker->block scatter map,
+replan hooks — come from the shared ``CodedRoundExecutor``
+(``runtime/executor.py``, DESIGN.md §5), the same substrate the coded
+trainer consumes, so the per-worker block counts follow the configured
+``AllocationScheme`` (Theorem 2 by default; any registered scheme via
+``ServeConfig.scheme``).
 """
 from __future__ import annotations
 
@@ -37,16 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coding import decode_systematic_jit
-from repro.core.engine import CodedComputeEngine
 from repro.core.planner import DeploymentPlan
-from repro.core.runtime_model import (
-    ClusterSpec,
-    LatencyModel,
-    comm_terms,
-    sample_worker_times,
-)
+from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import AllocationScheme
 from repro.models.model import DTYPES_LOGITS, Model, padded_vocab
+from repro.runtime.executor import CodedRoundExecutor
 
 NEG_INF = -1e30  # pad-vocab sentinel (matches Model._mask_pad_logits)
 
@@ -64,12 +62,13 @@ class ServeConfig:
 class CodedLMHead:
     """MDS-coded unembedding for straggler-tolerant decode.
 
-    Device-resident state for the jit pipeline is precomputed at init:
-    the (nb, kb) generator, the worker->block scatter map (which coded
-    blocks die when worker w misses the deadline), and the per-worker
-    shifted-exponential parameters the jitted finish-mask sampler draws
-    from. All ``*_jit`` methods are traceable and run under the server's
-    single compiled generation program.
+    Per-round mechanics (deadline, straggler-mask sampling, worker->block
+    scatter map, replan hooks) come from the shared
+    ``CodedRoundExecutor`` — the same substrate the coded trainer runs
+    on (DESIGN.md §5). The head adds the workload-specific parts: the
+    coded vocab blocks and the logits encode/decode. All ``*_jit``
+    methods are traceable and run under the server's single compiled
+    generation program.
     """
 
     def __init__(self, embed_table, cluster: ClusterSpec, *, block_rows: int = 256,
@@ -79,10 +78,13 @@ class CodedLMHead:
         vp, d = self.table.shape
         self.block_rows = block_rows
         self.kb = -(-vp // block_rows)  # blocks needed to cover the vocab
-        self.engine = CodedComputeEngine(cluster, self.kb, scheme)
-        self.plan: DeploymentPlan = self.engine.plan
+        self.executor = CodedRoundExecutor(
+            cluster, self.kb, scheme, deadline_safety=deadline_safety
+        )
+        self.engine = self.executor.engine
+        self.plan: DeploymentPlan = self.executor.plan
         self.nb = self.plan.n
-        self.generator = np.asarray(self.engine.generator(key=key))
+        self.generator = np.asarray(self.executor.generator(key=key))
         self.generator_j = jnp.asarray(self.generator)
         # coded blocks: (nb, R, D) = einsum over the block-reshaped table
         pad = self.kb * block_rows - vp
@@ -91,52 +93,17 @@ class CodedLMHead:
         self.coded = jnp.asarray(
             np.einsum("nk,krd->nrd", self.generator, blocks, optimize=True)
         )
-        self.deadline = self.engine.deadline(deadline_safety)
+        self.deadline = self.executor.deadline
         self._rows_of_worker = self.plan.row_ranges  # block ranges per worker
         # worker->block scatter map: block_owner[i] = worker holding coded
         # block i, so a (W,) finish mask gathers to an (nb,) erasure mask
         # in one device op (no per-worker Python loop at decode time).
-        owner = np.zeros((self.nb,), np.int32)
-        for w, (s, e) in enumerate(self._rows_of_worker):
-            owner[s:e] = w
-        self.block_owner = jnp.asarray(owner)
-        self._loads_w = jnp.asarray(self.plan.loads_per_worker, jnp.float32)
-        self._mus_w = jnp.asarray(
-            [self.plan.cluster.groups[j].mu for j in self.plan.group_of_worker]
-        )
-        # comm-delay schemes: fold the per-load download cost into alpha
-        # and add the fixed transfer shift, so sampled times stay
-        # commensurate with the comm-aware deadline
-        sch = self.engine.scheme
-        if sch.latency_model is LatencyModel.COMM_DELAY:
-            shift_g, dal_g = comm_terms(
-                self.plan.cluster, sch.upload, sch.download
-            )
-        else:
-            ng = self.plan.cluster.num_groups
-            shift_g, dal_g = np.zeros(ng), np.zeros(ng)
-        self._alphas_w = jnp.asarray(
-            [self.plan.cluster.groups[j].alpha + dal_g[j]
-             for j in self.plan.group_of_worker]
-        )
-        self._shift_w = jnp.asarray(
-            [shift_g[j] for j in self.plan.group_of_worker], jnp.float32
-        )
+        self.block_owner = self.executor.slot_owner
 
     # ------------------------------------------------------ jit pipeline
     def finish_mask_jit(self, key, deadline):
-        """(W,) bool straggler mask, traceable (shifted-exp model).
-
-        Samples under the scheme's OWN latency model so the times are
-        commensurate with the deadline (which ``plan_deadline`` computes
-        under that same model — e.g. reisizadeh is per-row MODEL_30).
-        """
-        t = sample_worker_times(
-            key, self._loads_w, self._mus_w, self._alphas_w, self.kb, 1,
-            model=self.engine.scheme.latency_model,
-            shift_per_worker=self._shift_w,
-        )[0]
-        return t <= deadline
+        """(W,) bool straggler mask, traceable (``CodedRoundExecutor``)."""
+        return self.executor.finish_mask_jit(key, deadline)
 
     def encode_logits(self, logits, *, use_kernel: bool = False):
         """Mix plain logit BLOCKS with G: (B, V) -> (nb, B, R) products.

@@ -1,4 +1,17 @@
-"""Step-level telemetry: timing EMAs, tokens/s, JSONL sink."""
+"""Step-level telemetry: timing EMAs, tokens/s, events, JSONL sink.
+
+``Telemetry`` is a context manager so file handles close
+deterministically (tests create sinks in tempfiles)::
+
+    with Telemetry(path) as tel:
+        tel.tick(); tel.log(step, metrics)
+        tel.event("all_workers_missed_deadline", step=step)
+
+Besides per-step metric records, the runtime surfaces discrete
+*events* (degraded aggregation, replans, deadline misses) through
+``event``; they land in the same JSONL stream tagged with an ``event``
+field and are kept in memory for tests/operators to inspect.
+"""
 from __future__ import annotations
 
 import json
@@ -11,6 +24,7 @@ class Telemetry:
         self.ema = ema
         self.step_time: float | None = None
         self._last: float | None = None
+        self.events: list[dict] = []
         self._fh = open(path, "a") if path else None
 
     def tick(self) -> float | None:
@@ -29,11 +43,28 @@ class Telemetry:
         rec = {"step": step, **{k: float(v) for k, v in metrics.items()}}
         if self.step_time and tokens_per_step:
             rec["tokens_per_s"] = tokens_per_step / self.step_time
+        self._write(rec)
+        return rec
+
+    def event(self, name: str, **fields) -> dict:
+        """Record a discrete runtime event (degraded step, replan, ...)."""
+        rec = {"event": name, **fields}
+        self.events.append(rec)
+        self._write(rec)
+        return rec
+
+    def _write(self, rec: dict) -> None:
         if self._fh:
             self._fh.write(json.dumps(rec) + "\n")
             self._fh.flush()
-        return rec
 
     def close(self):
         if self._fh:
             self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Telemetry":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

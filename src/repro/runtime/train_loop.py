@@ -1,27 +1,34 @@
-"""Training loop: heterogeneity-aware DP + fault-tolerant aggregation.
+"""Training loop: heterogeneity-aware gradient coding on the coded substrate.
 
-Paper integration (beyond-paper, recorded in EXPERIMENTS.md):
+Paper integration (DESIGN.md §5):
 
-* **Heterogeneity-aware batch split** — the paper's optimal load
-  allocation (Theorem 2) applied to the global batch: worker group j
-  processes a share proportional to ``N_j * l*_j / n*``. Uniform DP on a
-  heterogeneous fleet makes every step as slow as the slowest group; the
-  paper's allocation equalizes the per-group expected finish time (the
-  same Lemma-1 balancing argument, applied to microbatches instead of
-  coded rows).
-* **Drop-straggler aggregation** — gradients from workers that miss the
-  deadline (T* x safety) are dropped and the sum is rescaled by the
-  surviving token count (erasure semantics, no code needed since
-  gradients are an average, not an exact recovery).
+* **Gradient coding** (Wang et al. 2019, arXiv:1901.09339) — the global
+  batch is split into ``k`` partitions; the ``grad_coding`` scheme
+  (Theorem-2 load balancing, ``core/allocation.py``) assigns each worker
+  a speed-proportional number of coded partition-gradients, and the
+  master recovers the FULL-batch gradient from any ``k`` coded rows via
+  the decode vectors of ``core/gradient_coding.py``. Erasure aggregation
+  is device-resident: the jitted train step samples the straggler mask,
+  solves for the decode vector, and folds sub-threshold rounds in with
+  ``jnp.where`` — one compiled program per step, no host numpy.
+* **Heterogeneity-aware batch split** (``heterogeneous_batch_split``) —
+  the paper's Theorem-2 share ``N_j l*_j / n*`` applied to microbatches;
+  the *uncoded* drop-straggler comparator of ``benchmarks/fig_grad.py``.
+* **Drop-straggler aggregation** (``aggregate_with_erasures``) — the
+  host-side baseline: gradients from workers that miss the deadline are
+  dropped and the sum rescaled. When EVERY worker misses, the step is
+  skipped (previous gradient reused when available) and the event is
+  surfaced through telemetry instead of aborting training.
 
-The in-process loop below runs the standard jitted step; the
-heterogeneous sharding math is exercised by tests/benchmarks via
-``heterogeneous_batch_split`` and ``aggregate_with_erasures``.
+The per-round mechanics — deadline, erasure-mask sampling, worker->slot
+scatter map, elastic replans — come from the ``CodedRoundExecutor``
+shared with the serving loop (``runtime/executor.py``); ``Trainer`` adds
+the gradient-specific encode/decode on top. ``TrainConfig(cluster=...)``
+turns coded execution on; without a cluster the plain jitted step runs.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -30,9 +37,12 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core.allocation import optimal_allocation
+from repro.core.gradient_coding import assignment_matrix, decode_vector_jit
 from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import AllocationScheme
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.telemetry import Telemetry
 
 PyTree = Any
@@ -56,16 +66,31 @@ def heterogeneous_batch_split(cluster: ClusterSpec, global_batch: int) -> np.nda
     return base
 
 
-def aggregate_with_erasures(grads_list, token_counts, finished_mask):
+def aggregate_with_erasures(grads_list, token_counts, finished_mask, *,
+                            prev_grads=None, telemetry: Telemetry | None = None):
     """Weighted-average gradients over the workers that met the deadline.
 
     grads_list: list of gradient pytrees (one per worker/group shard).
     token_counts: tokens contributing to each shard's gradient.
     finished_mask: bool per shard. Returns the rescaled mean gradient.
+
+    When EVERY worker misses the deadline the step degrades instead of
+    aborting: the previous gradient (``prev_grads``) is reused when the
+    caller carries one, otherwise a zero gradient is returned, and the
+    event is surfaced through ``telemetry`` so operators see the stall.
     """
     w = np.asarray(token_counts, np.float64) * np.asarray(finished_mask, np.float64)
     total = w.sum()
-    assert total > 0, "every worker missed the deadline"
+    if total <= 0:
+        if telemetry is not None:
+            telemetry.event(
+                "all_workers_missed_deadline", workers=len(grads_list)
+            )
+        if prev_grads is not None:
+            return prev_grads
+        return jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads_list[0]
+        )
     scale = [float(x / total) for x in w]
 
     def combine(*leaves):
@@ -86,6 +111,16 @@ class TrainConfig:
     log_every: int = 10
     telemetry_path: str | None = None
     seed: int = 0
+    # ---- coded execution (gradient coding on the shared substrate) ----
+    #: straggler fleet to plan against; None = plain (uncoded) training
+    cluster: ClusterSpec | None = None
+    #: registry name or typed scheme for the partition-load allocation
+    scheme: str | AllocationScheme = "grad_coding"
+    scheme_params: dict | None = None
+    #: gradient partitions k (must divide the global batch); None = one
+    #: partition per batch row
+    partitions: int | None = None
+    deadline_safety: float = 3.0
 
 
 def make_train_step_fn(model: Model, opt_cfg: AdamWConfig):
@@ -107,19 +142,174 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, *, donate: bool = True):
     return jax.jit(make_train_step_fn(model, opt_cfg), **kwargs)
 
 
+def make_coded_train_step_fn(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    executor: CodedRoundExecutor,
+    b_matrix,
+    partitions: int,
+):
+    """Raw coded step: (params, opt_state, batch, key, deadline) -> ...
+
+    One traceable program per round (DESIGN.md §5):
+
+    1. per-partition gradients — the (B, S) batch reshaped to
+       ``(k, B/k, S)`` and ``value_and_grad`` vmapped over the partition
+       axis;
+    2. straggler mask — ``executor.finish_mask_jit`` samples per-worker
+       times under the scheme's latency model from the ``fold_in``'d
+       step key, gathered to the coded-row erasure mask through the
+       worker->slot scatter map;
+    3. decode — ``decode_vector_jit`` solves ``a^T B_S = 1`` on the
+       survivors; the aggregated gradient is the partitions weighted by
+       ``a^T B`` (exactly ones when decodable — the coding is linear, so
+       this equals explicitly materializing the n coded gradients and
+       combining them with ``a``);
+    4. skip-step fallback — when fewer than k coded rows survive, params
+       and optimizer state pass through unchanged via ``jnp.where`` on
+       the decode-ok flag (no Python branch; ``metrics['skipped']``
+       surfaces the event).
+    """
+    b_mat = jnp.asarray(b_matrix, jnp.float32)
+
+    def coded_step(params, opt_state, batch, key, deadline):
+        if batch.get("extras") is not None:
+            raise NotImplementedError(
+                "coded training does not partition family extras yet"
+            )
+        toks, labels = batch["tokens"], batch["labels"]
+        b = toks.shape[0]
+        tp = toks.reshape(partitions, b // partitions, *toks.shape[1:])
+        lp = labels.reshape(partitions, b // partitions, *labels.shape[1:])
+
+        def part_grad(tb, lb):
+            (_, metrics), g = jax.value_and_grad(model.loss_fn, has_aux=True)(
+                params, {"tokens": tb, "labels": lb}
+            )
+            return g, metrics
+
+        grads_k, metrics_k = jax.vmap(part_grad)(tp, lp)
+
+        wmask = executor.finish_mask_jit(key, deadline)  # (W,) workers
+        row_alive = executor.slot_mask_jit(wmask)  # (n,) coded rows
+        a, ok = decode_vector_jit(b_mat, row_alive)
+        w_part = a @ b_mat  # (k,) partition weights; == 1 when decodable
+        agg = jax.tree.map(
+            lambda g: jnp.tensordot(
+                w_part / partitions, g.astype(jnp.float32), axes=1
+            ),
+            grads_k,
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, agg, opt_state, params
+        )
+        # fewer than k surviving coded rows: skip the step (params and
+        # optimizer state unchanged) — erasure degradation, never an abort
+        new_params = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_params, params
+        )
+        new_opt = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_opt, opt_state
+        )
+        metrics = {name: jnp.mean(v) for name, v in metrics_k.items()}
+        metrics.update(opt_metrics)
+        metrics["survivors"] = jnp.sum(wmask).astype(jnp.float32)
+        metrics["coded_rows_alive"] = jnp.sum(row_alive).astype(jnp.float32)
+        metrics["skipped"] = 1.0 - ok.astype(jnp.float32)
+        return new_params, new_opt, metrics
+
+    return coded_step
+
+
 class Trainer:
-    """End-to-end single-host trainer with checkpoint/restart."""
+    """End-to-end single-host trainer with checkpoint/restart.
+
+    With ``TrainConfig(cluster=...)`` the trainer runs coded: a
+    ``CodedRoundExecutor`` plans partition loads under the configured
+    scheme (``grad_coding`` by default) and every step runs as one
+    compiled program — gradients, straggler sampling, decode and the
+    skip-step fallback included. ``self.traces`` counts (re)traces so
+    tests can assert the step never re-enters Python. ``replan``
+    rebuilds the program on membership changes, scheme params preserved.
+    """
 
     def __init__(self, model: Model, data, opt_cfg: AdamWConfig, cfg: TrainConfig):
         self.model = model
         self.data = data
         self.opt_cfg = opt_cfg
         self.cfg = cfg
-        self.step_fn = make_train_step(model, opt_cfg)
+        self.traces = 0
+        self.executor: CodedRoundExecutor | None = None
+        if cfg.cluster is not None:
+            # validate the coded config BEFORE acquiring file handles
+            # (telemetry/checkpointer), so a raising __init__ leaks nothing
+            gb = (
+                self.data.shape.global_batch
+                if hasattr(self.data, "shape") else None
+            )
+            k = cfg.partitions if cfg.partitions is not None else gb
+            if k is None:
+                raise ValueError(
+                    "coded training needs cfg.partitions when the data "
+                    "pipeline has no .shape to infer the batch from"
+                )
+            if gb is not None and gb % k:
+                raise ValueError(
+                    f"partitions ({k}) must divide the global batch ({gb})"
+                )
+            self.partitions = int(k)
         self.telemetry = Telemetry(cfg.telemetry_path)
         self._ckpt = (
             AsyncCheckpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
         )
+        if cfg.cluster is not None:
+            self.executor = CodedRoundExecutor(
+                cfg.cluster,
+                self.partitions,
+                cfg.scheme,
+                scheme_params=cfg.scheme_params,
+                deadline_safety=cfg.deadline_safety,
+            )
+            self._build_coded_step()
+        else:
+            self.step_fn = make_train_step(model, opt_cfg)
+
+    def _build_coded_step(self) -> None:
+        """(Re)compile the coded step against the executor's current plan."""
+        self.b_matrix = np.asarray(
+            assignment_matrix(
+                self.executor.n,
+                self.partitions,
+                key=jax.random.PRNGKey(self.cfg.seed),
+            )
+        )
+        raw = make_coded_train_step_fn(
+            self.model, self.opt_cfg, self.executor, self.b_matrix,
+            self.partitions,
+        )
+
+        def counted(params, opt_state, batch, key, deadline):
+            self.traces += 1  # python side effect: runs only while tracing
+            return raw(params, opt_state, batch, key, deadline)
+
+        self.coded_step_fn = jax.jit(counted, donate_argnums=(0, 1))
+
+    def replan(self, new_cluster: ClusterSpec):
+        """Elastic replan mid-training; scheme params preserved.
+
+        Rebuilds the deadline, assignment matrix and the compiled step
+        for the new membership (worker/slot shapes change), and surfaces
+        the replan through telemetry.
+        """
+        if self.executor is None:
+            raise ValueError("replan requires coded training (cfg.cluster)")
+        plan = self.executor.replan(new_cluster)
+        self._build_coded_step()
+        self.telemetry.event(
+            "replan", workers=plan.num_workers, n=plan.n,
+            deadline=self.executor.deadline,
+        )
+        return plan
 
     def init_or_restore(self):
         params = self.model.init_params(jax.random.PRNGKey(self.cfg.seed))
@@ -144,10 +334,21 @@ class Trainer:
             self.data.shape.global_batch * self.data.shape.seq_len
             if hasattr(self.data, "shape") else None
         )
+        coded = self.executor is not None
+        step_key = jax.random.PRNGKey(self.cfg.seed + 1)
         history = []
         for step in range(start, self.cfg.steps):
             batch = self.data.next_batch()
-            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            if coded:
+                params, opt_state, metrics = self.coded_step_fn(
+                    params, opt_state, batch,
+                    jax.random.fold_in(step_key, step),
+                    jnp.float32(self.executor.deadline),
+                )
+            else:
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch
+                )
             self.telemetry.tick()
             if (step + 1) % self.cfg.log_every == 0 or step == start:
                 rec = self.telemetry.log(step + 1, metrics, tokens_per_step)

@@ -1,0 +1,328 @@
+"""Coded training: gradient coding on the shared round substrate.
+
+Covers the PR-4 subsystem (DESIGN.md §5): decode-vector correctness
+against the numpy oracle over an erasure grid, exact parity between the
+coded train step and plain DP when nobody misses the deadline, skip-step
+degradation when everybody does, replans mid-training preserving scheme
+params, the host-side drop-straggler fallback, the bandwidth MLE feeding
+elastic replans, and telemetry handle hygiene.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.core.gradient_coding import (
+    assignment_matrix,
+    decode_vector,
+    decode_vector_jit,
+    encode_gradients,
+    aggregate_coded,
+)
+from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import CommAware, make_scheme
+from repro.data import SyntheticLMData
+from repro.models.model import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
+from repro.runtime.telemetry import Telemetry
+from repro.runtime.train_loop import (
+    TrainConfig,
+    Trainer,
+    aggregate_with_erasures,
+    make_coded_train_step_fn,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------- decode vectors
+def test_decode_vector_oracle_erasure_grid():
+    """jit decode vector == numpy oracle across an erasure grid."""
+    n, k = 9, 5
+    b = np.asarray(assignment_matrix(n, k, key=KEY))
+    for erased in itertools.chain.from_iterable(
+        itertools.combinations(range(n), e) for e in range(0, n - k + 2)
+    ):
+        mask = np.ones(n, bool)
+        mask[list(erased)] = False
+        a_np, ok_np = decode_vector(b, mask)
+        a_j, ok_j = decode_vector_jit(b, mask)
+        assert bool(ok_j) == ok_np == (mask.sum() >= k)
+        if ok_np:
+            # both satisfy a^T B = 1 and zero the erased rows
+            np.testing.assert_allclose(a_np @ b, np.ones(k), atol=1e-9)
+            np.testing.assert_allclose(np.asarray(a_j) @ b, np.ones(k),
+                                       atol=1e-4)
+            assert np.all(a_np[~mask] == 0)
+            assert np.all(np.asarray(a_j)[~mask] == 0)
+        else:
+            assert np.all(a_np == 0) and np.all(np.asarray(a_j) == 0)
+
+
+def test_decode_vector_no_erasures_is_exact_ones():
+    """Systematic B + full survival -> decode vector is EXACTLY e_1..e_k."""
+    b = assignment_matrix(7, 4, key=KEY)
+    a, ok = decode_vector_jit(b, np.ones(7, bool))
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(a)[:4], np.ones(4))
+    np.testing.assert_array_equal(np.asarray(a)[4:], np.zeros(3))
+
+
+def test_encode_aggregate_roundtrip_matches_weighting():
+    """sum_i a_i (B g)_i == sum_j (a^T B)_j g_j on a pytree."""
+    n, k = 6, 3
+    b = assignment_matrix(n, k, key=KEY)
+    grads = {"w": jax.random.normal(KEY, (k, 4, 2)),
+             "b": jax.random.normal(jax.random.fold_in(KEY, 1), (k, 5))}
+    mask = np.array([True, False, True, True, False, True])
+    a, ok = decode_vector(np.asarray(b), mask)
+    assert ok
+    coded = encode_gradients(grads, b)
+    agg = aggregate_coded(coded, a)
+    w = a @ np.asarray(b)
+    for leaf, ref in ((agg["w"], grads["w"]), (agg["b"], grads["b"])):
+        direct = jnp.tensordot(jnp.asarray(w, leaf.dtype), ref, axes=1)
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(direct),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------- coded train step
+def _mk(model_batch=4, seq=32, steps=4, cluster=None, **cfg_kw):
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    sh = ShapeConfig("t", seq, model_batch, "train")
+    data = SyntheticLMData(c, sh, seed=1)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    cfg = TrainConfig(steps=steps, log_every=1, cluster=cluster, **cfg_kw)
+    return Trainer(m, data, opt_cfg, cfg)
+
+
+def test_coded_step_parity_with_uncoded_when_no_erasures():
+    """Huge deadline -> nobody misses -> coded == plain DP training."""
+    cluster = ClusterSpec.make([2, 2], [4.0, 1.0])
+    coded = _mk(cluster=cluster)
+    coded.executor.deadline = 1e9  # nobody ever misses
+    p_coded, _, hist_coded = coded.run()
+    assert coded.traces == 1  # ONE compiled program across all steps
+
+    plain = _mk(cluster=None)
+    p_plain, _, hist_plain = plain.run()
+
+    for a, b in zip(jax.tree.leaves(p_coded), jax.tree.leaves(p_plain)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=5e-4, atol=5e-5,
+        )
+    for hc, hp in zip(hist_coded, hist_plain):
+        assert hc["loss"] == pytest.approx(hp["loss"], rel=1e-4)
+        assert hc["skipped"] == 0.0
+
+
+def test_coded_step_erasures_match_numpy_oracle():
+    """Fixed erasure pattern: jitted step == oracle decode + adamw."""
+    cluster = ClusterSpec.make([2, 2], [4.0, 1.0])
+    t = _mk(cluster=cluster)
+    exe = t.executor
+    wmask = np.ones(exe.num_workers, bool)
+    wmask[0] = False  # one worker's coded rows erased
+    exe.finish_mask_jit = lambda key, deadline: jnp.asarray(wmask)
+    t._build_coded_step()
+
+    params = t.model.init_params(jax.random.PRNGKey(0))
+    opt_state = adamw_init(t.opt_cfg, params)
+    batch = t.data.next_batch()
+    new_p, _, metrics = t.coded_step_fn(
+        params, opt_state, batch, KEY, jnp.float32(exe.deadline)
+    )
+    assert metrics["skipped"] == 0.0
+
+    # ------- numpy/jax oracle: per-partition grads, oracle decode vector
+    # (fresh params/opt: the jitted step donated the originals)
+    params = t.model.init_params(jax.random.PRNGKey(0))
+    opt_state = adamw_init(t.opt_cfg, params)
+    k = t.partitions
+    row_alive = np.asarray(wmask)[np.asarray(exe.slot_owner)]
+    a, ok = decode_vector(t.b_matrix, row_alive)
+    assert ok
+    w_part = a @ t.b_matrix
+    toks = np.asarray(batch["tokens"]).reshape(k, 1, -1)
+    labs = np.asarray(batch["labels"]).reshape(k, 1, -1)
+    agg = None
+    for j in range(k):
+        _, g = jax.value_and_grad(t.model.loss_fn, has_aux=True)(
+            params, {"tokens": jnp.asarray(toks[j]),
+                     "labels": jnp.asarray(labs[j])}
+        )
+        term = jax.tree.map(
+            lambda x: (w_part[j] / k) * x.astype(jnp.float32), g
+        )
+        agg = term if agg is None else jax.tree.map(jnp.add, agg, term)
+    ref_p, _, _ = adamw_update(t.opt_cfg, agg, opt_state, params)
+    for got, ref in zip(jax.tree.leaves(new_p), jax.tree.leaves(ref_p)):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            rtol=2e-4, atol=2e-5,
+        )
+
+
+def test_coded_step_skips_when_all_miss():
+    """Zero deadline -> every round undecodable -> params/opt unchanged."""
+    cluster = ClusterSpec.make([2, 2], [4.0, 1.0])
+    t = _mk(cluster=cluster)
+    params = t.model.init_params(jax.random.PRNGKey(0))
+    opt_state = adamw_init(t.opt_cfg, params)
+    batch = t.data.next_batch()
+    new_p, new_o, metrics = t.coded_step_fn(
+        params, opt_state, batch, KEY, jnp.float32(0.0)
+    )
+    assert metrics["skipped"] == 1.0
+    assert metrics["survivors"] == 0.0
+    p0 = t.model.init_params(jax.random.PRNGKey(0))  # donated originals
+    for got, ref in zip(jax.tree.leaves(new_p), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_replan_mid_training_preserves_scheme_params():
+    """Membership change: scheme object survives, step recompiles, runs."""
+    cluster = ClusterSpec.make([3, 3], [4.0, 0.5])
+    t = _mk(cluster=cluster, steps=2, scheme="grad_coding")
+    scheme0 = t.executor.scheme
+    t.run()
+    traces0 = t.traces
+
+    smaller = ClusterSpec.make([2, 3], [4.0, 0.5])
+    plan = t.replan(smaller)
+    assert t.executor.scheme is scheme0  # typed params preserved exactly
+    assert plan.num_workers == 5
+    assert t.executor.replans == 1
+    assert any(e["event"] == "replan" for e in t.telemetry.events)
+
+    t.cfg.steps = 4
+    t.run()  # re-runs from scratch on the new fleet
+    assert t.traces == traces0 + 1  # exactly one retrace for new shapes
+
+
+def test_trainer_rejects_bad_partitions():
+    cluster = ClusterSpec.make([2], [1.0])
+    with pytest.raises(ValueError, match="divide"):
+        _mk(cluster=cluster, partitions=3)
+
+
+# ------------------------------------------- host-side degraded fallback
+def test_aggregate_with_erasures_all_missed_degrades():
+    """All workers missing no longer crashes: zero grads (or previous),
+    with the stall surfaced as a telemetry event."""
+    g1 = {"w": jnp.ones(3)}
+    g2 = {"w": 2 * jnp.ones(3)}
+    tel = Telemetry()
+    out = aggregate_with_erasures([g1, g2], [5, 5], [False, False],
+                                  telemetry=tel)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.zeros(3))
+    assert tel.events and tel.events[0]["event"] == "all_workers_missed_deadline"
+
+    prev = {"w": 7 * jnp.ones(3)}
+    out = aggregate_with_erasures([g1, g2], [5, 5], [False, False],
+                                  prev_grads=prev, telemetry=tel)
+    np.testing.assert_array_equal(np.asarray(out["w"]), 7 * np.ones(3))
+    assert len(tel.events) == 2
+
+
+# ------------------------------------------------ bandwidth estimation
+def test_bandwidth_mle_and_comm_aware_replan():
+    """observe_transfers MLEs per-group bandwidth and feeds it into the
+    estimated cluster, so CommAware elastic replans see measured links."""
+    cluster = ClusterSpec.make([4, 4], [2.0, 2.0])  # spec: infinite links
+    tracker = StragglerTracker(cluster, forget=0.5)
+    b_true = np.array([8.0, 0.1])
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        # noisy transfer measurements around payload / b_j
+        t = np.concatenate([
+            (1.0 / b_true[0]) * rng.uniform(0.9, 1.1, 4),
+            (1.0 / b_true[1]) * rng.uniform(0.9, 1.1, 4),
+        ])
+        tracker.observe_transfers(t, payload=1.0)
+    est = tracker.bandwidth_estimates
+    assert est[0] == pytest.approx(8.0, rel=0.1)
+    assert est[1] == pytest.approx(0.1, rel=0.1)
+    est_cluster = tracker.estimated_cluster()
+    np.testing.assert_allclose(est_cluster.bandwidths, est, rtol=1e-12)
+
+    # comm-aware replan on the estimates: the slow measured link gets
+    # ZERO load even though the spec said links were free
+    ctl = ElasticController(cluster, k=512, scheme=CommAware(upload=2.0,
+                                                             download=2.0))
+    plan = ctl.engine.plan
+    assert np.all(np.asarray(plan.loads_per_worker) > 0)  # comm-blind spec
+    new_plan = ctl.on_estimates_update(tracker)
+    assert ctl.engine.scheme == CommAware(upload=2.0, download=2.0)
+    loads = np.asarray(new_plan.loads_per_worker)
+    assert np.all(loads[:4] > 0)
+    assert np.all(loads[4:] == 0), "slow measured link must be excluded"
+
+
+def test_bandwidth_estimates_default_to_spec():
+    """No observations -> estimated cluster keeps the spec bandwidths."""
+    cluster = ClusterSpec.make([3, 3], [2.0, 1.0], 1.0, [5.0, float("inf")])
+    tracker = StragglerTracker(cluster)
+    est = tracker.estimated_cluster()
+    np.testing.assert_array_equal(est.bandwidths, cluster.bandwidths)
+
+
+# -------------------------------------------------------- telemetry
+def test_telemetry_context_manager_closes_file(tmp_path):
+    path = tmp_path / "tel.jsonl"
+    with Telemetry(str(path)) as tel:
+        tel.tick()
+        tel.log(1, {"loss": 1.5})
+        tel.event("replan", workers=3)
+        assert tel._fh is not None
+    assert tel._fh is None  # closed deterministically on exit
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2
+    assert '"event": "replan"' in lines[1]
+
+
+# ---------------------------------------------- executor substrate bits
+def test_executor_slot_map_and_deadline():
+    cluster = ClusterSpec.make([2, 2], [4.0, 0.5])
+    exe = CodedRoundExecutor(cluster, 16, "grad_coding")
+    plan = exe.plan
+    assert exe.n == int(np.sum(plan.loads_per_worker))
+    owner = np.asarray(exe.slot_owner)
+    for w, (s, e) in enumerate(plan.row_ranges):
+        assert np.all(owner[s:e] == w)
+    # deadline is finite, positive, and at least the analytic bound
+    assert np.isfinite(exe.deadline) and exe.deadline > 0
+    assert exe.deadline >= plan.t_star
+    # slot gather: worker mask -> per-row mask
+    wmask = np.zeros(exe.num_workers, bool)
+    wmask[1] = True
+    rows = np.asarray(exe.slot_mask_jit(wmask))
+    s, e = plan.row_ranges[1]
+    assert rows[s:e].all() and rows.sum() == e - s
+
+
+def test_executor_serves_every_registered_scheme_mask():
+    """finish_mask_jit is commensurate with each scheme's own model."""
+    from repro.core.schemes import scheme_names, scheme_params
+
+    cluster = ClusterSpec.make([4, 4], [4.0, 1.0], 1.0, [8.0, 2.0])
+    fallbacks = {"n": 24.0, "r": 4}
+    for name in scheme_names():
+        try:
+            scheme = make_scheme(name)
+        except ValueError:
+            scheme = make_scheme(name, **{
+                p: fallbacks[p] for p in scheme_params(name) if p in fallbacks
+            })
+        exe = CodedRoundExecutor(cluster, 16, scheme)
+        mask = exe.sample_finish_mask(KEY)
+        assert mask.shape == (cluster.total_workers,)
+        assert mask.dtype == bool

@@ -130,6 +130,35 @@ def test_fig9_matches_reisizadeh_tiny():
     assert rec["rows"][1]["ours_cor2"] < rec["rows"][0]["ours_cor2"]
 
 
+def test_fig_grad_ordering_tiny():
+    from benchmarks import fig_grad
+    from repro.core import ClusterSpec
+
+    rec = fig_grad.run(
+        verbose=False,
+        cluster=ClusterSpec.make([10, 20, 10], [4.0, 1.0, 0.25], 1.0),
+        conv_cluster=ClusterSpec.make([2, 2], [4.0, 0.5], 1.0),
+        trials=600,
+        k=1_000,
+        conv_steps=6,
+        conv_batch=4,
+        conv_seq=16,
+    )
+    # the subsystem's acceptance ordering: coded beats drop-straggler
+    # beats uniform DP on expected step latency, and tracks its bound
+    assert rec["coded_beats_drop"]
+    assert rec["coded_beats_uniform"]
+    assert rec["drop_straggler"] <= rec["uniform_dp"] * MC_SLACK
+    assert rec["grad_coding"] >= rec["bound_T*"] * 0.95
+    assert rec["speedup_vs_drop"] > 1.0
+    # gradient quality at an equal latency budget: coded decodes the
+    # exact full-batch gradient; drop's error can only be >= that
+    err = rec["convergence"]["grad_error"]
+    assert err["uniform_dp"] == 0.0
+    assert err["grad_coding"] < 1e-3
+    assert err["drop_straggler"] >= err["grad_coding"] - 1e-9
+
+
 def test_fig_comm_ordering_tiny():
     from benchmarks import fig_comm
 
