@@ -1,6 +1,6 @@
 """Run every paper-figure benchmark + the roofline report.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig4,fig9]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig4,fig9] [--skip roofline]``
 """
 from __future__ import annotations
 
@@ -16,6 +16,7 @@ from benchmarks import (
     fig7,
     fig8,
     fig9,
+    fig_adapt,
     fig_comm,
     fig_grad,
     roofline,
@@ -26,15 +27,28 @@ from benchmarks import (
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset, e.g. fig4,fig9")
+                    help="comma-separated subset to run, e.g. fig4,fig9")
+    ap.add_argument("--skip", default=None,
+                    help="comma-separated subset to leave out, e.g. "
+                         "serve_throughput,roofline")
     args = ap.parse_args()
     mods = {
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
-        "fig_comm": fig_comm, "fig_grad": fig_grad,
+        "fig_comm": fig_comm, "fig_grad": fig_grad, "fig_adapt": fig_adapt,
         "roofline": roofline, "serve_throughput": serve_throughput,
     }
     names = args.only.split(",") if args.only else list(mods)
+    skips = args.skip.split(",") if args.skip else []
+    unknown = [n for n in names + skips if n not in mods]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s): {', '.join(unknown)}; "
+            f"available: {', '.join(mods)}"
+        )
+    names = [n for n in names if n not in set(skips)]
+    if not names:
+        raise SystemExit("nothing to run: --skip removed every benchmark")
     for name in names:
         print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
         t0 = time.time()

@@ -161,6 +161,10 @@ class ClusterSpec:
         fallback = float("inf") if default_bandwidth is None else float(
             default_bandwidth
         )
+        if not fallback > 0:
+            raise ValueError(
+                f"default bandwidth must be > 0, got {default_bandwidth!r}"
+            )
         ns, mus, bws = [], [], []
         for part in groups.split(","):
             fields = part.split(":")
@@ -168,9 +172,48 @@ class ClusterSpec:
                 raise ValueError(
                     f"bad group {part!r}: expected N:mu or N:mu:bandwidth"
                 )
-            ns.append(int(fields[0]))
-            mus.append(float(fields[1]))
-            bws.append(float(fields[2]) if len(fields) == 3 else fallback)
+            try:
+                n = int(fields[0])
+            except ValueError:
+                raise ValueError(
+                    f"bad group {part!r}: worker count {fields[0]!r} is not "
+                    f"an integer"
+                ) from None
+            if n <= 0:
+                raise ValueError(
+                    f"bad group {part!r}: worker count must be a positive "
+                    f"integer, got {n}"
+                )
+            try:
+                mu = float(fields[1])
+            except ValueError:
+                raise ValueError(
+                    f"bad group {part!r}: straggling parameter mu "
+                    f"{fields[1]!r} is not a number"
+                ) from None
+            if not mu > 0:
+                raise ValueError(
+                    f"bad group {part!r}: straggling parameter mu must be "
+                    f"> 0, got {mu}"
+                )
+            if len(fields) == 3:
+                try:
+                    bw = float(fields[2])
+                except ValueError:
+                    raise ValueError(
+                        f"bad group {part!r}: bandwidth {fields[2]!r} is "
+                        f"not a number"
+                    ) from None
+                if not bw > 0:
+                    raise ValueError(
+                        f"bad group {part!r}: bandwidth must be > 0, got "
+                        f"{bw} (use inf or omit it for a free link)"
+                    )
+            else:
+                bw = fallback
+            ns.append(n)
+            mus.append(mu)
+            bws.append(bw)
         return cls.make(ns, mus, 1.0, bws)
 
     @property

@@ -21,6 +21,7 @@ from repro.core.schemes import make_scheme, scheme_names
 from repro.data.pipeline import make_extras
 from repro.models.model import Model
 from repro.runtime.serve_loop import ServeConfig, Server
+from repro.sim import make_scenario, scenario_names
 
 
 def main():
@@ -56,7 +57,25 @@ def main():
     ap.add_argument("--legacy-decode", action="store_true",
                     help="per-token host loop with numpy decode (the path "
                          "the jit pipeline replaces; for A/B timing)")
+    ap.add_argument("--scenario", default=None, choices=scenario_names(),
+                    help="cluster-dynamics scenario: serve rounds against "
+                         "a drifting TRUE fleet (requires --coded)")
+    ap.add_argument("--adapt-every", type=int, default=None,
+                    help="closed-loop cadence: consume straggler estimates "
+                         "and maybe replan the coded head every R serve "
+                         "rounds (requires --scenario)")
+    ap.add_argument("--adapt-threshold", type=float, default=None,
+                    help="hysteresis: replan only when the estimated "
+                         "latency improves by this fraction (default 0.05)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="serve rounds to run under --scenario (default: "
+                         "min(scenario horizon, 24))")
     args = ap.parse_args()
+    if args.scenario is not None and not args.coded:
+        raise SystemExit("--scenario requires --coded (a fleet to perturb)")
+    if args.adapt_every is not None and args.scenario is None:
+        raise SystemExit("--adapt-every requires --scenario (closed-loop "
+                         "serving is driven by a scenario trace)")
 
     config = get_arch(args.arch)
     if args.reduced:
@@ -91,12 +110,73 @@ def main():
     extras = make_extras(config, args.batch)
     if config.family == "audio":
         extras = {"enc_out": model.encode(params, extras["frames"])}
+    if args.scenario is not None:
+        _serve_scenario(server, prompts, extras, args, cluster)
+        return
     t0 = time.perf_counter()
     out = server.generate(prompts, args.max_new, extras=extras)
     dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s)")
     print("sample:", out[0, -args.max_new:].tolist())
+
+
+def _serve_scenario(server, prompts, extras, args, cluster):
+    """Serve rounds against a drifting TRUE fleet, optionally closed-loop.
+
+    Each round is one ``generate`` call whose straggler masks sample from
+    the scenario's current cluster; with ``--adapt-every`` an
+    ``AdaptiveController`` observes the round times and replans the
+    coded head (rebuilding the compiled pipeline) when its hysteresis
+    rule fires — the same controller the trainer runs (DESIGN.md §7).
+    """
+    from repro.runtime.control import AdaptConfig, AdaptiveController
+
+    # build the scenario AT the round budget so its factory anchors
+    # event times/drift rates to the rounds actually served (a default
+    # 120-round spec truncated to 24 rounds would never reach its events)
+    rounds = args.rounds if args.rounds is not None else 24
+    spec = make_scenario(args.scenario, horizon=max(rounds, 1))
+    trace = spec.trace(cluster, seed=0)
+    head = server.coded_head
+    controller = None
+    if args.adapt_every is not None:
+        controller = AdaptiveController(
+            head.executor,
+            AdaptConfig(
+                every=args.adapt_every,
+                threshold=(0.05 if args.adapt_threshold is None
+                           else args.adapt_threshold),
+            ),
+            on_replan=server.refresh_coded_head,
+        )
+    key = jax.random.PRNGKey(7)
+    t0 = time.perf_counter()
+    toks = 0
+    for t in range(rounds):
+        true_cluster = trace.at(t)
+        server.set_true_cluster(true_cluster)
+        out = server.generate(
+            prompts, args.max_new, key=jax.random.fold_in(key, t),
+            extras=extras,
+        )
+        toks += out.shape[0] * args.max_new
+        if controller is not None:
+            d = controller.observe_truth(
+                jax.random.fold_in(key, 10_000 + t), true_cluster
+            )
+            if d is not None and d.replanned:
+                print(f"[round {t}] replanned ({d.reason}): "
+                      f"deadline -> {head.deadline:.4f}, "
+                      f"loads {head.plan.loads_per_worker.tolist()}")
+    dt = time.perf_counter() - t0
+    print(f"scenario {spec.name!r}: {rounds} rounds, {toks} tokens in "
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+    if controller is not None:
+        replans = [d for d in controller.decisions if d.replanned]
+        print(f"controller: {len(controller.decisions)} decisions, "
+              f"{len(replans)} replans at rounds "
+              f"{[d.round for d in replans]}")
 
 
 if __name__ == "__main__":

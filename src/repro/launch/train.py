@@ -20,6 +20,7 @@ from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import scheme_names
+from repro.sim import scenario_names
 from repro.data import SyntheticLMData
 from repro.models.model import Model
 from repro.optim import AdamWConfig
@@ -57,13 +58,27 @@ def main(argv=None):
     ap.add_argument("--deadline-safety", type=float, default=None,
                     help="per-round deadline = expected latency x this "
                          "(default: 3.0)")
+    ap.add_argument("--scenario", default=None, choices=scenario_names(),
+                    help="cluster-dynamics scenario perturbing the TRUE "
+                         "fleet over the run (requires --hetero-groups); "
+                         "pair with --adapt-every to close the loop")
+    ap.add_argument("--adapt-every", type=int, default=None,
+                    help="closed-loop control cadence: consume straggler "
+                         "estimates and maybe replan every R steps "
+                         "(requires --hetero-groups)")
+    ap.add_argument("--adapt-threshold", type=float, default=None,
+                    help="hysteresis: replan only when the estimated "
+                         "latency improves by this fraction (default 0.05)")
     args = ap.parse_args(argv)
     if args.hetero_groups is None:
         # coded flags must not silently no-op without a fleet to plan for
         coded_flags = [
             name for name, v in (("--scheme", args.scheme),
                                  ("--partitions", args.partitions),
-                                 ("--deadline-safety", args.deadline_safety))
+                                 ("--deadline-safety", args.deadline_safety),
+                                 ("--scenario", args.scenario),
+                                 ("--adapt-every", args.adapt_every),
+                                 ("--adapt-threshold", args.adapt_threshold))
             if v is not None
         ]
         if coded_flags:
@@ -99,6 +114,11 @@ def main(argv=None):
         deadline_safety=(
             3.0 if args.deadline_safety is None else args.deadline_safety
         ),
+        scenario=args.scenario,
+        adapt_every=args.adapt_every,
+        adapt_threshold=(
+            0.05 if args.adapt_threshold is None else args.adapt_threshold
+        ),
     )
     if args.checkpoint_dir and not args.resume:
         # fresh run: ignore stale checkpoints by training from step 0 only
@@ -121,6 +141,10 @@ def main(argv=None):
               f"k={trainer.partitions} n={plan.n} "
               f"loads={plan.loads_per_worker.tolist()} "
               f"deadline={trainer.executor.deadline:.4f}")
+    if trainer.controller is not None:
+        print(f"adaptive control: every {cfg.adapt_every} steps, "
+              f"threshold {cfg.adapt_threshold:.0%}"
+              + (f", scenario={args.scenario}" if args.scenario else ""))
     params, _, history = trainer.run()
     if history:
         first, last = history[0], history[-1]
@@ -130,6 +154,13 @@ def main(argv=None):
             skipped = sum(h.get("skipped", 0.0) for h in history)
             print(f"coded rounds logged: {len(history)}, skipped steps "
                   f"among them: {int(skipped)}")
+    if trainer.controller is not None:
+        ctl = trainer.controller
+        replanned = [d for d in ctl.decisions if d.replanned]
+        print(f"controller: {len(ctl.decisions)} decisions, "
+              f"{len(replanned)} replans "
+              f"(rounds {[d.round for d in replanned]}), "
+              f"final deadline {trainer.executor.deadline:.4f}")
     return params
 
 

@@ -2,7 +2,7 @@
 
 Optimizer moments dtype is configurable: f32 default; bf16 for the
 largest archs (grok-314b) so params+moments+grads fit the pod (see
-DESIGN.md §6 and EXPERIMENTS.md §Dry-run memory table).
+DESIGN.md §9 and EXPERIMENTS.md §Dry-run memory table).
 """
 from __future__ import annotations
 

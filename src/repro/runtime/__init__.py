@@ -1,3 +1,10 @@
+from repro.runtime.control import (
+    AdaptConfig,
+    AdaptiveController,
+    Decision,
+    coverage_latency,
+    replan_decision,
+)
 from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
 from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
@@ -10,8 +17,11 @@ from repro.runtime.train_loop import (
 )
 
 __all__ = [
+    "AdaptConfig",
+    "AdaptiveController",
     "CodedLMHead",
     "CodedRoundExecutor",
+    "Decision",
     "ElasticController",
     "ServeConfig",
     "Server",
@@ -19,6 +29,8 @@ __all__ = [
     "Telemetry",
     "TrainConfig",
     "Trainer",
+    "coverage_latency",
     "make_coded_train_step_fn",
     "make_train_step",
+    "replan_decision",
 ]

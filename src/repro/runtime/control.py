@@ -1,0 +1,422 @@
+"""AdaptiveController: one closed replan loop for serve AND train (§7).
+
+Before this module the repo had two half-closed loops: serving replanned
+through ``ElasticController.on_estimates_update`` (unconditionally, every
+call) and training replanned only when a caller invoked
+``Trainer.replan`` by hand. This module owns the full control policy
+once, on top of the shared ``CodedRoundExecutor`` substrate:
+
+* **cadence** — consume ``StragglerTracker`` estimates every ``every``
+  rounds (estimates between cadence points only accumulate);
+* **hysteresis** — replan only when the *estimated-latency improvement*
+  clears ``threshold`` (relative), evaluated with the deterministic
+  mean-field ``coverage_latency`` below, so decisions are reproducible
+  and never flap on Monte-Carlo noise;
+* **replan-cost model** — a replan recompiles the consumer's program
+  (the coded train step retraces, the serve pipeline re-jits), so the
+  projected saving ``(t_cur - t_new) * horizon`` must also exceed
+  ``replan_cost`` (same units as round latency);
+* **membership changes always replan** — a plan sized for departed (or
+  unaware of joined) workers is wrong regardless of magnitude;
+* **telemetry** — every decision (held or replanned) is emitted as an
+  ``adapt_decision`` event, so the control loop is post-hoc analyzable
+  from the JSONL stream (DESIGN.md §8).
+
+``ElasticController`` (serving's membership-triggered replanner) now
+routes its estimate updates through the same ``replan_decision`` rule
+when constructed with a threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.planner import DeploymentPlan
+from repro.core.runtime_model import (
+    ClusterSpec,
+    GroupSpec,
+    LatencyModel,
+    comm_terms,
+)
+from repro.core.schemes import AllocationScheme
+
+
+def coverage_latency(
+    cluster: ClusterSpec,
+    loads_per_group: Sequence[float],
+    k: int,
+    *,
+    model: LatencyModel = LatencyModel.MODEL_1,
+    upload: float = 0.0,
+    download: float = 0.0,
+) -> float:
+    """Deterministic mean-field round latency of per-group loads.
+
+    The smallest ``t`` with ``sum_j N_j l_j F_j(t) >= k`` — the expected
+    coded-row coverage reaching the decode threshold, the same fixed
+    point the paper's allocation equalizes (at the optimal loads this
+    recovers ``T*`` up to the paper's harmonic-number approximation).
+    Used as the controller's decision metric precisely because it is
+    noise-free: hysteresis comparisons of current-vs-candidate plans
+    must not flap on Monte-Carlo resampling.
+
+    ``F_j`` is the group's shifted-exponential CDF under ``model``
+    (CommDelay transfer terms derived from the cluster's bandwidths and
+    the given costs). Returns ``inf`` when the loads cannot cover ``k``
+    even with every worker finished (e.g. after a leave burst) — the
+    caller maps that to a deadline-timeout penalty. Group-code schemes
+    (``uniform_r``) use per-group completion semantics this threshold
+    approximation only bounds; for controller decisions that is
+    acceptable (both sides of the comparison use the same metric).
+    """
+    l = np.asarray(loads_per_group, float)
+    n_w = np.asarray([g.num_workers for g in cluster.groups], float)
+    mu = np.asarray([g.mu for g in cluster.groups], float)
+    al = np.asarray([g.alpha for g in cluster.groups], float)
+    if l.shape != n_w.shape:
+        raise ValueError(
+            f"loads shape {l.shape} does not match the cluster's "
+            f"{n_w.shape[0]} groups"
+        )
+    if model is LatencyModel.COMM_DELAY:
+        shift_c, dal = comm_terms(cluster, upload, download)
+        al = al + dal
+    else:
+        shift_c = np.zeros_like(al)
+    live = (l > 0) & (n_w > 0)
+    if not np.any(live) or float(np.sum(n_w[live] * l[live])) < k - 1e-9:
+        return float("inf")
+    l, n_w, mu, al, shift_c = (
+        a[live] for a in (l, n_w, mu, al, shift_c)
+    )
+    scale = l if model.per_row else l / float(k)
+    shift = al * scale + shift_c  # per-worker deterministic part
+    rate = mu / scale  # exponential tail rate
+
+    def coverage(t: float) -> float:
+        f = 1.0 - np.exp(-rate * np.maximum(t - shift, 0.0))
+        return float(np.sum(n_w * l * f))
+
+    lo = float(np.min(shift))
+    hi = float(np.max(shift)) + 1.0
+    for _ in range(200):
+        if coverage(hi) >= k - 1e-9:
+            break
+        hi *= 2.0
+    else:
+        return float("inf")  # coverage only reaches k asymptotically
+    for _ in range(100):
+        mid = 0.5 * (lo + hi)
+        if coverage(mid) >= k - 1e-9:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Cadence + hysteresis policy of the adaptive controller."""
+
+    every: int = 10  # consume estimates every R rounds
+    threshold: float = 0.05  # relative latency improvement needed to act
+    replan_cost: float = 0.0  # one replan's cost, in round-latency units
+    horizon: int = 50  # rounds a replan's improvement amortizes over
+    #: exponential forgetting of the default tracker's estimates — faster
+    #: than StragglerTracker's 0.9 default because the control loop's
+    #: whole point is reacting to drift within a few cadence periods
+    forget: float = 0.7
+
+    def __post_init__(self):
+        if self.every <= 0:
+            raise ValueError(f"AdaptConfig.every must be > 0, got {self.every}")
+        if not 0 <= self.forget < 1:
+            raise ValueError(
+                f"AdaptConfig.forget must be in [0, 1), got {self.forget}"
+            )
+        if self.threshold < 0:
+            raise ValueError(
+                f"AdaptConfig.threshold must be >= 0, got {self.threshold}"
+            )
+        if self.replan_cost < 0 or self.horizon <= 0:
+            raise ValueError(
+                f"AdaptConfig needs replan_cost >= 0 and horizon > 0, got "
+                f"replan_cost={self.replan_cost}, horizon={self.horizon}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One controller decision (held OR replanned), telemetry-ready."""
+
+    round: int
+    replanned: bool
+    reason: str  # "membership" | "improvement" | "hold" | "forced"
+    current: float  # est. latency of the incumbent plan on the estimates
+    candidate: float  # est. latency of a fresh plan on the estimates
+    gain: float  # relative improvement (current - candidate) / current
+
+
+def replan_decision(
+    scheme: AllocationScheme,
+    plan: DeploymentPlan,
+    est_cluster: ClusterSpec,
+    *,
+    threshold: float,
+    replan_cost: float = 0.0,
+    horizon: int = 50,
+    round: int = 0,
+) -> Decision:
+    """The controller's decision rule (pure — does not execute the replan).
+
+    Membership changes (group count or any per-group worker count)
+    always replan. Otherwise both the incumbent plan's loads and a
+    candidate allocation are evaluated on the ESTIMATED cluster with
+    ``coverage_latency``; the controller acts iff the relative gain
+    crosses ``threshold`` (inclusive — a gain exactly at threshold
+    replans) AND the absolute saving amortized over ``horizon`` rounds
+    pays for ``replan_cost``.
+    """
+    cur_cluster = plan.cluster
+    membership_changed = est_cluster.num_groups != cur_cluster.num_groups or any(
+        a.num_workers != b.num_workers
+        for a, b in zip(est_cluster.groups, cur_cluster.groups)
+    )
+    if membership_changed:
+        return Decision(
+            round=round, replanned=True, reason="membership",
+            current=float("nan"), candidate=float("nan"), gain=float("nan"),
+        )
+    model = scheme.latency_model
+    upload = float(getattr(scheme, "upload", 0.0))
+    download = float(getattr(scheme, "download", 0.0))
+    alloc = plan.allocation
+    if alloc is not None:
+        cur_loads = np.asarray(alloc.loads, float)
+    else:  # legacy plan: recover per-group loads from the worker expansion
+        loads_w = np.asarray(plan.loads_per_worker, float)
+        gid = np.asarray(plan.group_of_worker)
+        cur_loads = np.asarray(
+            [loads_w[gid == j][0] if np.any(gid == j) else 0.0
+             for j in range(cur_cluster.num_groups)]
+        )
+    t_cur = coverage_latency(
+        est_cluster, cur_loads, plan.k,
+        model=model, upload=upload, download=download,
+    )
+    cand = scheme.allocate(est_cluster, plan.k)
+    t_new = coverage_latency(
+        est_cluster, np.asarray(cand.loads, float), plan.k,
+        model=model, upload=upload, download=download,
+    )
+    if not np.isfinite(t_cur):
+        # the incumbent plan cannot cover k on the estimated cluster:
+        # any feasible candidate is an unbounded improvement
+        replan = np.isfinite(t_new)
+        gain = 1.0 if replan else 0.0
+    else:
+        gain = (t_cur - t_new) / t_cur
+        replan = gain >= threshold and (t_cur - t_new) * horizon >= replan_cost
+    return Decision(
+        round=round, replanned=bool(replan),
+        reason="improvement" if replan else "hold",
+        current=float(t_cur), candidate=float(t_new), gain=float(gain),
+    )
+
+
+class AdaptiveController:
+    """Closed-loop straggler-adaptive replanning over one executor.
+
+    Feed it one ``observe_round`` per executed round (per-worker round
+    times; ``inf`` for workers that never responded, plus the current
+    registration ``membership`` when the fleet can grow). Every
+    ``cfg.every`` rounds it folds the tracker's (mu, alpha, bandwidth)
+    estimates into an estimated cluster and applies ``replan_decision``;
+    on a replan it drives ``executor.replan`` (scheme params preserved
+    by the engine), re-anchors the tracker to the new membership, and
+    invokes ``on_replan`` so the consumer can rebuild whatever it traced
+    against the old shapes (the coded train step, the serve pipeline).
+    """
+
+    def __init__(
+        self,
+        executor,
+        cfg: AdaptConfig | None = None,
+        *,
+        tracker=None,
+        telemetry=None,
+        on_replan: Callable[[], None] | None = None,
+    ):
+        self.executor = executor
+        self.cfg = cfg or AdaptConfig()
+        if tracker is None:
+            from repro.runtime.fault_tolerance import StragglerTracker
+
+            tracker = StragglerTracker(executor.cluster, forget=self.cfg.forget)
+        self.tracker = tracker
+        self.telemetry = telemetry
+        self.on_replan = on_replan
+        self.round = 0  # monotonic executed-round counter
+        self.decisions: list[Decision] = []
+        self._membership: tuple[int, ...] | None = None
+
+    # ------------------------------------------------------------- views
+    @property
+    def plan(self) -> DeploymentPlan:
+        return self.executor.plan
+
+    @property
+    def replans(self) -> int:
+        return self.executor.replans
+
+    # ------------------------------------------------------ observation
+    def observe_round(
+        self,
+        times,
+        *,
+        loads=None,
+        membership: Sequence[int] | None = None,
+        transfer_times=None,
+        payload: float = 1.0,
+    ) -> Decision | None:
+        """Ingest one round of observations; adapt when the cadence hits.
+
+        ``times``: (W,) per-worker round-trip times for the CURRENT
+        plan's workers (``inf`` = never responded — repeated infs are
+        how leavers are detected). ``membership``: per-group registered
+        worker counts from the cluster's membership service; required
+        for join bursts to become visible (times alone can only shrink
+        the fleet). ``transfer_times``: separately-measured per-worker
+        UPLOAD delays — they feed the bandwidth MLE AND all comm terms
+        (the upload shift directly, the per-load download term via the
+        freshly-updated bandwidth estimates) are subtracted from
+        ``times`` before the (mu, alpha) MLE, so comm delay is not
+        double-counted as compute slowness when the scheme later adds
+        its transfer terms back on top of the estimated alphas. Returns
+        the cadence decision, or None off-cadence.
+        """
+        times = np.asarray(times, float)
+        loads = np.asarray(
+            self.executor.plan.loads_per_worker if loads is None else loads
+        )
+        if transfer_times is not None:
+            tt = np.asarray(transfer_times, float)
+            bw = self.tracker.observe_transfers(tt, payload)
+            times = times - np.where(np.isfinite(tt), tt, 0.0)
+            download = float(getattr(self.executor.scheme, "download", 0.0))
+            if download > 0:
+                gid = np.asarray(self.executor.plan.group_of_worker)
+                inv_b = np.where(np.isfinite(bw), 1.0 / bw, 0.0)[gid]
+                times = times - download * inv_b * np.asarray(loads, float) \
+                    / self.executor.k
+            # estimate lag can overshoot the subtraction; the MLE needs
+            # positive times (inf = missing stays inf)
+            times = np.where(np.isfinite(times),
+                             np.maximum(times, 1e-9), times)
+        self.tracker.observe_round(times, loads, self.executor.k)
+        if membership is not None:
+            self._membership = tuple(int(m) for m in membership)
+        self.round += 1
+        if self.round % self.cfg.every:
+            return None
+        return self.update()
+
+    def observe_truth(
+        self, key, true_cluster: ClusterSpec | None = None
+    ) -> Decision | None:
+        """Sample one round of ground-truth observations and ingest them.
+
+        The simulation-side loop every consumer repeats: map the CURRENT
+        plan's workers onto the true cluster's parameters
+        (``worker_param_arrays``), draw one round of times with the same
+        sampler the compiled loops use (same ``key`` => the identical
+        draw), feed the upload shifts as measured transfer times for
+        CommDelay schemes, and derive the registration membership from
+        the truth. ``true_cluster=None`` observes the plan's own cluster
+        (stationary truth).
+        """
+        exe = self.executor
+        if true_cluster is None:
+            mus, alphas, shifts = exe.worker_params
+        else:
+            mus, alphas, shifts = exe.worker_param_arrays(true_cluster)
+        times = np.asarray(
+            exe.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
+        )
+        sch = exe.scheme
+        comm = (
+            sch.latency_model is LatencyModel.COMM_DELAY
+            and getattr(sch, "upload", 0.0) > 0
+        )
+        return self.observe_round(
+            times,
+            membership=(
+                None if true_cluster is None
+                else tuple(g.num_workers for g in true_cluster.groups)
+            ),
+            transfer_times=np.asarray(shifts) if comm else None,
+            payload=float(sch.upload) if comm else 1.0,
+        )
+
+    def estimated_cluster(self) -> ClusterSpec:
+        """Tracker estimates + registration membership, as a ClusterSpec.
+
+        Worker counts come from the registration truth when one has been
+        observed (joins included), minus nothing — workers the tracker
+        flagged as failed but registration still lists are the
+        registration's problem; without a membership feed the tracker's
+        own failure detection drives the counts. Parameters (mu, alpha,
+        bandwidth) are always the tracker's current estimates. Groups
+        with zero workers are dropped.
+        """
+        m = self._membership
+        if m is None or len(m) != self.tracker.cluster.num_groups:
+            return self.tracker.estimated_cluster()
+        mu = self.tracker.mu_estimates
+        al = self.tracker.alpha_estimates
+        bw = self.tracker.bandwidth_estimates
+        groups, bws = [], []
+        for j, count in enumerate(m):
+            if count <= 0:
+                continue
+            groups.append(GroupSpec(int(count), float(mu[j]), float(al[j])))
+            bws.append(float(bw[j]))
+        return ClusterSpec(tuple(groups)).with_bandwidths(bws)
+
+    # ---------------------------------------------------------- decision
+    def update(self) -> Decision:
+        """Run one decision now (the cadence calls this automatically)."""
+        est = self.estimated_cluster()
+        d = replan_decision(
+            self.executor.scheme,
+            self.executor.plan,
+            est,
+            threshold=self.cfg.threshold,
+            replan_cost=self.cfg.replan_cost,
+            horizon=self.cfg.horizon,
+            round=self.round,
+        )
+        if d.replanned:
+            self.executor.replan(est)
+            self.tracker.rebind(self.executor.cluster)
+            self._membership = tuple(
+                g.num_workers for g in self.executor.cluster.groups
+            )
+            if self.on_replan is not None:
+                self.on_replan()
+        self.decisions.append(d)
+        if self.telemetry is not None:
+            self.telemetry.event(
+                "adapt_decision",
+                round=d.round,
+                replanned=d.replanned,
+                reason=d.reason,
+                current=d.current,
+                candidate=d.candidate,
+                gain=d.gain,
+                deadline=float(self.executor.deadline),
+                workers=int(self.executor.num_workers),
+            )
+        return d

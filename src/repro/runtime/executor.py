@@ -81,27 +81,62 @@ class CodedRoundExecutor:
         #: (n,) worker index holding each coded slot
         self.slot_owner = jnp.asarray(owner)
         self._loads_w = jnp.asarray(plan.loads_per_worker, jnp.float32)
-        self._mus_w = jnp.asarray(
-            [plan.cluster.groups[j].mu for j in plan.group_of_worker]
-        )
-        # comm-delay schemes: fold the per-load download cost into alpha
-        # and add the fixed transfer shift, so sampled times stay
-        # commensurate with the comm-aware deadline
+        self._mus_w, self._alphas_w, self._shift_w = self.worker_param_arrays()
+
+    def worker_param_arrays(self, cluster: ClusterSpec | None = None):
+        """(mus_w, alphas_w, shift_w) for the plan's workers under ``cluster``.
+
+        Defaults to the plan's own cluster (the arrays the jitted finish
+        mask samples from). Passing a different cluster maps the CURRENT
+        plan's workers onto that cluster's group parameters — the
+        scenario layer's ground truth, so a closed-loop simulation can
+        sample what *actually* happens to a possibly-stale plan. Group
+        correspondence is by index; when a true group has fewer workers
+        than planned (a leave burst) the planned tail gets an infinite
+        shift — those workers never respond — and extra true workers
+        (joins) are invisible until a replan deploys them. Comm-delay
+        schemes derive their transfer terms from the given cluster's
+        bandwidths, so link changes flow through too.
+        """
+        plan = self.plan
+        if cluster is None:
+            cluster = plan.cluster
         sch = self.engine.scheme
+        ng = cluster.num_groups
         if sch.latency_model is LatencyModel.COMM_DELAY:
-            shift_g, dal_g = comm_terms(plan.cluster, sch.upload, sch.download)
+            shift_g, dal_g = comm_terms(cluster, sch.upload, sch.download)
         else:
-            ng = plan.cluster.num_groups
             shift_g, dal_g = np.zeros(ng), np.zeros(ng)
-        self._alphas_w = jnp.asarray(
-            [plan.cluster.groups[j].alpha + dal_g[j]
-             for j in plan.group_of_worker]
-        )
-        self._shift_w = jnp.asarray(
-            [shift_g[j] for j in plan.group_of_worker], jnp.float32
+        planned = [g.num_workers for g in plan.cluster.groups]
+        mus, alphas, shifts = [], [], []
+        rank_in_group = dict.fromkeys(range(len(planned)), 0)
+        for j in plan.group_of_worker:
+            j = int(j)
+            alive_j = (
+                cluster.groups[j].num_workers if j < ng else 0
+            )
+            if rank_in_group[j] < alive_j:
+                g = cluster.groups[j]
+                mus.append(g.mu)
+                alphas.append(g.alpha + dal_g[j])
+                shifts.append(shift_g[j])
+            else:  # departed worker: never responds
+                mus.append(1.0)
+                alphas.append(1.0)
+                shifts.append(np.inf)
+            rank_in_group[j] += 1
+        return (
+            jnp.asarray(mus),
+            jnp.asarray(alphas),
+            jnp.asarray(shifts, jnp.float32),
         )
 
     # convenience views ----------------------------------------------------
+    @property
+    def worker_params(self):
+        """(mus_w, alphas_w, shift_w) the finish-mask sampler defaults to."""
+        return self._mus_w, self._alphas_w, self._shift_w
+
     @property
     def scheme(self) -> AllocationScheme:
         return self.engine.scheme
@@ -175,22 +210,44 @@ class CodedRoundExecutor:
         return t * safety
 
     # ------------------------------------------------------- jitted methods
-    def finish_mask_jit(self, key, deadline=None):
+    def round_times_jit(self, key, *, mus=None, alphas=None, shifts=None):
+        """(W,) per-worker round times, traceable (shifted-exp model).
+
+        Samples the plan's integer loads under the scheme's OWN latency
+        model. The ``mus``/``alphas``/``shifts`` overrides (shapes (W,))
+        let a closed-loop caller sample under the scenario layer's TRUE
+        cluster parameters (``worker_param_arrays(true_cluster)``) while
+        the plan — and therefore the loads and deadline — stays whatever
+        the controller last believed; they may be traced arrays, so the
+        truth can change every round without retracing.
+        """
+        t = sample_worker_times(
+            key,
+            self._loads_w,
+            self._mus_w if mus is None else mus,
+            self._alphas_w if alphas is None else alphas,
+            self.k,
+            1,
+            model=self.engine.scheme.latency_model,
+            shift_per_worker=self._shift_w if shifts is None else shifts,
+        )[0]
+        return t
+
+    def finish_mask_jit(self, key, deadline=None, *, mus=None, alphas=None,
+                        shifts=None):
         """(W,) bool straggler mask, traceable (shifted-exp model).
 
         Samples under the scheme's OWN latency model so the times are
         commensurate with the deadline (which ``plan_deadline`` computes
         under that same model — e.g. reisizadeh is per-row MODEL_30,
         comm-aware adds per-worker transfer shifts). ``deadline`` may be
-        a traced scalar; defaults to the executor's planned one.
+        a traced scalar; defaults to the executor's planned one. The
+        parameter overrides are ``round_times_jit``'s (ground-truth
+        injection for closed-loop scenarios).
         """
         if deadline is None:
             deadline = self.deadline
-        t = sample_worker_times(
-            key, self._loads_w, self._mus_w, self._alphas_w, self.k, 1,
-            model=self.engine.scheme.latency_model,
-            shift_per_worker=self._shift_w,
-        )[0]
+        t = self.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
         return t <= deadline
 
     def slot_mask_jit(self, worker_mask):
@@ -200,6 +257,22 @@ class CodedRoundExecutor:
     def sample_finish_mask(self, key) -> np.ndarray:
         """Host-side convenience: one sampled mask at the planned deadline."""
         return np.asarray(self.finish_mask_jit(key, self.deadline))
+
+    def sample_round_times(self, key, cluster: ClusterSpec | None = None
+                           ) -> np.ndarray:
+        """Host-side: one (W,) round-time draw, optionally under a TRUE
+        cluster's parameters (the observation feed for a
+        ``StragglerTracker``/``AdaptiveController`` closed loop). Same
+        computation as the in-program sampler, so feeding it the same
+        key yields times consistent with the compiled step's mask.
+        """
+        if cluster is None:
+            mus = alphas = shifts = None
+        else:
+            mus, alphas, shifts = self.worker_param_arrays(cluster)
+        return np.asarray(
+            self.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
+        )
 
     # ----------------------------------------------------------- elasticity
     def replan(self, new_cluster: ClusterSpec) -> DeploymentPlan:

@@ -98,6 +98,19 @@ class StragglerTracker:
             self._mu[j] = self.forget * self._mu[j] + (1 - self.forget) * mu_hat
         return finished
 
+    def rebind(self, cluster: ClusterSpec) -> None:
+        """Re-anchor per-worker state to a new membership (post-replan).
+
+        The replanned cluster embeds the tracker's own estimates as its
+        spec values (``estimated_cluster`` built it), so re-initializing
+        from it preserves the (mu, alpha, bandwidth) state while the
+        per-worker miss counters reset to the new fleet shape. Without
+        this, ``observe_round`` would slice the next round's times with
+        the OLD group sizes.
+        """
+        self.cluster = cluster
+        self.__post_init__()
+
     def observe_transfers(self, transfer_times: np.ndarray,
                           payload: float = 1.0) -> np.ndarray:
         """Per-group bandwidth MLE from observed per-worker transfer times.
@@ -140,6 +153,16 @@ class StragglerTracker:
         return self._bw.copy()
 
     @property
+    def mu_estimates(self) -> np.ndarray:
+        """Current per-group straggling-rate estimates."""
+        return self._mu.copy()
+
+    @property
+    def alpha_estimates(self) -> np.ndarray:
+        """Current per-group shift estimates."""
+        return self._alpha.copy()
+
+    @property
     def failed_workers(self) -> np.ndarray:
         return np.flatnonzero(self._missed >= self.fail_after)
 
@@ -172,6 +195,13 @@ class ElasticController:
     makes elasticity practical at 1000+ workers. Thin wrapper over
     ``CodedComputeEngine.replan``; scheme params travel with the engine's
     typed scheme object across every membership change.
+
+    With a ``threshold`` the controller applies the shared hysteresis
+    rule of ``repro.runtime.control.replan_decision`` to estimate
+    updates: membership changes still always replan, but pure parameter
+    drift only replans when the estimated-latency improvement crosses
+    the threshold (inclusive). ``threshold=None`` keeps the legacy
+    replan-on-every-update behaviour.
     """
 
     def __init__(
@@ -181,11 +211,18 @@ class ElasticController:
         *,
         scheme: str | AllocationScheme = "optimal",
         scheme_params: dict | None = None,
+        threshold: float | None = None,
+        replan_cost: float = 0.0,
+        horizon: int = 50,
     ):
         self.k = k
         self.engine = CodedComputeEngine(
             cluster, k, scheme, scheme_params=scheme_params
         )
+        self.threshold = threshold
+        self.replan_cost = replan_cost
+        self.horizon = horizon
+        self.last_decision = None  # the most recent hysteresis Decision
 
     @property
     def plan(self) -> DeploymentPlan:
@@ -199,4 +236,18 @@ class ElasticController:
         return self.engine.replan(new_cluster)
 
     def on_estimates_update(self, tracker: StragglerTracker) -> DeploymentPlan:
-        return self.on_membership_change(tracker.estimated_cluster())
+        est = tracker.estimated_cluster()
+        if self.threshold is not None:
+            from repro.runtime.control import replan_decision
+
+            self.last_decision = replan_decision(
+                self.engine.scheme,
+                self.engine.plan,
+                est,
+                threshold=self.threshold,
+                replan_cost=self.replan_cost,
+                horizon=self.horizon,
+            )
+            if not self.last_decision.replanned:
+                return self.engine.plan
+        return self.on_membership_change(est)

@@ -75,21 +75,37 @@ class CodedLMHead:
                  key=None, scheme: str | AllocationScheme = "optimal",
                  deadline_safety: float = 3.0):
         self.table = np.asarray(embed_table, np.float32)  # (Vp, D)
-        vp, d = self.table.shape
+        vp, _ = self.table.shape
         self.block_rows = block_rows
         self.kb = -(-vp // block_rows)  # blocks needed to cover the vocab
         self.executor = CodedRoundExecutor(
             cluster, self.kb, scheme, deadline_safety=deadline_safety
         )
         self.engine = self.executor.engine
+        self._generator_key = key
+        self.refresh()
+
+    def refresh(self) -> None:
+        """(Re)bind all plan-derived state to the executor's current plan.
+
+        Called at init and after every executor replan (e.g. driven by an
+        ``AdaptiveController``): the code size ``nb``, the generator, the
+        coded vocab blocks, the deadline and the worker->block scatter
+        map all depend on the deployed plan. Consumers holding programs
+        traced against the old shapes must re-jit (``Server`` does via
+        ``refresh_coded_head``).
+        """
         self.plan: DeploymentPlan = self.executor.plan
         self.nb = self.plan.n
-        self.generator = np.asarray(self.executor.generator(key=key))
+        self.generator = np.asarray(
+            self.executor.generator(key=self._generator_key)
+        )
         self.generator_j = jnp.asarray(self.generator)
         # coded blocks: (nb, R, D) = einsum over the block-reshaped table
-        pad = self.kb * block_rows - vp
+        vp, d = self.table.shape
+        pad = self.kb * self.block_rows - vp
         tbl = np.pad(self.table, ((0, pad), (0, 0)))
-        blocks = tbl.reshape(self.kb, block_rows, d)
+        blocks = tbl.reshape(self.kb, self.block_rows, d)
         self.coded = jnp.asarray(
             np.einsum("nk,krd->nrd", self.generator, blocks, optimize=True)
         )
@@ -100,10 +116,19 @@ class CodedLMHead:
         # in one device op (no per-worker Python loop at decode time).
         self.block_owner = self.executor.slot_owner
 
+    def replan(self, new_cluster: ClusterSpec) -> DeploymentPlan:
+        """Elastic replan + rebind (scheme params preserved by the engine)."""
+        plan = self.executor.replan(new_cluster)
+        self.refresh()
+        return plan
+
     # ------------------------------------------------------ jit pipeline
-    def finish_mask_jit(self, key, deadline):
+    def finish_mask_jit(self, key, deadline, *, mus=None, alphas=None,
+                        shifts=None):
         """(W,) bool straggler mask, traceable (``CodedRoundExecutor``)."""
-        return self.executor.finish_mask_jit(key, deadline)
+        return self.executor.finish_mask_jit(
+            key, deadline, mus=mus, alphas=alphas, shifts=shifts
+        )
 
     def encode_logits(self, logits, *, use_kernel: bool = False):
         """Mix plain logit BLOCKS with G: (B, V) -> (nb, B, R) products.
@@ -217,19 +242,58 @@ class Server:
         )
         self._decode = jax.jit(model.decode_step)
         self.traces = 0
+        #: optional ground-truth (mus_w, alphas_w, shift_w) the next
+        #: generate call samples straggling from (scenario closed loop)
+        self._true_params = None
+        self._generate_fn = jax.jit(
+            self._gen_program, static_argnames=("max_new",)
+        )
+
+    # --------------------------------------------------------- adaptivity
+    def set_true_cluster(self, cluster: ClusterSpec | None) -> None:
+        """Sample the NEXT generate call's straggling from this cluster.
+
+        The scenario layer's ground truth: the coded head keeps planning
+        against whatever the controller believes, but the in-program
+        finish masks draw from the true cluster's parameters (leavers
+        never respond, parameter drift shows up as missed deadlines).
+        ``None`` restores sampling from the plan's own cluster.
+        """
+        if self.coded_head is None:
+            raise ValueError("set_true_cluster requires a coded head")
+        self._true_params = (
+            None if cluster is None
+            else self.coded_head.executor.worker_param_arrays(cluster)
+        )
+
+    def refresh_coded_head(self) -> None:
+        """Rebind the head to its executor's current plan and re-jit.
+
+        The ``AdaptiveController.on_replan`` hook for serving: a replan
+        changes the code size and scatter map, which are closure
+        constants of the compiled generation program, so the jit cache
+        must be dropped (the retrace IS the serve-side replan cost the
+        controller's cost model charges for).
+        """
+        if self.coded_head is None:
+            raise ValueError("refresh_coded_head requires a coded head")
+        self.coded_head.refresh()
+        self._true_params = None  # stale shapes after a replan
         self._generate_fn = jax.jit(
             self._gen_program, static_argnames=("max_new",)
         )
 
     # ------------------------------------------------------- jit pipeline
-    def _coded_select(self, logits, step_key, deadline):
+    def _coded_select(self, logits, step_key, deadline, true_params=None):
         """One coded round on a (B, V) logits batch, fully traceable.
 
         Pad-vocab sentinels (-1e30) are zeroed before the block mix (they
         would otherwise dominate the float32 solve), decoded logits get
         them re-masked, and the insufficient-survivors fallback is a
         ``jnp.where`` on the decode-ok flag — no shape-dependent Python
-        branch inside the compiled program.
+        branch inside the compiled program. ``true_params`` optionally
+        overrides the straggler-sampling parameters (ground-truth
+        injection — see ``set_true_cluster``).
         """
         head = self.coded_head
         vocab = self.model.config.vocab_size
@@ -237,13 +301,19 @@ class Server:
         lf = logits.astype(jnp.float32)
         clean = jnp.where(ids[None, :] < vocab, lf, 0.0)
         products = head.encode_logits(clean, use_kernel=self.cfg.use_kernel)
-        mask = head.finish_mask_jit(step_key, deadline)
+        mus, alphas, shifts = (
+            true_params if true_params is not None else (None, None, None)
+        )
+        mask = head.finish_mask_jit(
+            step_key, deadline, mus=mus, alphas=alphas, shifts=shifts
+        )
         dec, ok = head.decode_logits_jit(products, mask)
         dec = dec[:, : logits.shape[-1]]
         dec = jnp.where(ids[None, :] < vocab, dec, NEG_INF)
         return jnp.where(ok, dec, lf)
 
-    def _gen_program(self, params, cache, prompts, key, deadline, *, max_new):
+    def _gen_program(self, params, cache, prompts, key, deadline,
+                     true_params=None, *, max_new):
         """The whole generation as one traceable program (two lax.scans)."""
         self.traces += 1  # python side effect: runs only while tracing
         b, s0 = prompts.shape
@@ -272,7 +342,7 @@ class Server:
             if self.coded_head is None:
                 return logits
             return self._coded_select(
-                logits, jax.random.fold_in(key, step), deadline
+                logits, jax.random.fold_in(key, step), deadline, true_params
             )
 
         # every sampled token goes through the coded head, including the
@@ -308,9 +378,19 @@ class Server:
         deadline = jnp.float32(
             self.coded_head.deadline if self.coded_head is not None else 0.0
         )
+        # straggler-sampling parameters ride along as (W,) arrays so the
+        # scenario layer can change the truth every round without a
+        # retrace (shapes only change on replan, which re-jits anyway)
+        true_params = None
+        if self.coded_head is not None:
+            true_params = (
+                self._true_params
+                if self._true_params is not None
+                else self.coded_head.executor.worker_params
+            )
         return self._generate_fn(
             self.params, cache, jnp.asarray(prompts, jnp.int32), key,
-            deadline, max_new=max_new,
+            deadline, true_params, max_new=max_new,
         )
 
     # ------------------------------------------------- legacy host loop

@@ -8,9 +8,14 @@ deterministically (tests create sinks in tempfiles)::
         tel.event("all_workers_missed_deadline", step=step)
 
 Besides per-step metric records, the runtime surfaces discrete
-*events* (degraded aggregation, replans, deadline misses) through
-``event``; they land in the same JSONL stream tagged with an ``event``
-field and are kept in memory for tests/operators to inspect.
+*events* (degraded aggregation, replans, adaptive-controller decisions,
+deadline misses) through ``event``; they land in the same JSONL stream
+tagged with an ``event`` field and are kept in memory for
+tests/operators to inspect. Every event record carries a monotonic
+``t`` sequence number (0, 1, 2, ... per sink), so interleaved control
+decisions are totally ordered and post-hoc analyzable even when wall
+clocks are useless (simulated rounds) — see DESIGN.md §8 for the event
+schema.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ class Telemetry:
         self.step_time: float | None = None
         self._last: float | None = None
         self.events: list[dict] = []
+        self._event_t = 0  # monotonic event sequence number
         self._fh = open(path, "a") if path else None
 
     def tick(self) -> float | None:
@@ -47,8 +53,14 @@ class Telemetry:
         return rec
 
     def event(self, name: str, **fields) -> dict:
-        """Record a discrete runtime event (degraded step, replan, ...)."""
-        rec = {"event": name, **fields}
+        """Record a discrete runtime event (degraded step, replan, ...).
+
+        Stamps a monotonic ``t`` (per-sink sequence number) unless the
+        caller provides its own — consumers that already carry a round
+        index still get total ordering for free via the default.
+        """
+        rec = {"event": name, "t": self._event_t, **fields}
+        self._event_t += 1
         self.events.append(rec)
         self._write(rec)
         return rec

@@ -121,6 +121,17 @@ class TrainConfig:
     #: partition per batch row
     partitions: int | None = None
     deadline_safety: float = 3.0
+    # ---- cluster dynamics + closed-loop adaptation (DESIGN.md §7) ----
+    #: registered scenario name (or a ScenarioSpec) perturbing the TRUE
+    #: cluster over the run; the plan only tracks it when adaptive
+    scenario: object | None = None
+    #: consume straggler estimates and maybe replan every this many
+    #: steps; None = no adaptive control (caller-initiated replans only)
+    adapt_every: int | None = None
+    #: hysteresis: minimum relative estimated-latency improvement
+    adapt_threshold: float = 0.05
+    #: modeled cost of one replan (recompile), in round-latency units
+    adapt_replan_cost: float = 0.0
 
 
 def make_train_step_fn(model: Model, opt_cfg: AdamWConfig):
@@ -169,10 +180,17 @@ def make_coded_train_step_fn(
        and optimizer state pass through unchanged via ``jnp.where`` on
        the decode-ok flag (no Python branch; ``metrics['skipped']``
        surfaces the event).
+
+    The optional trailing ``true_params`` argument is a
+    ``(mus_w, alphas_w, shift_w)`` triple of (W,) arrays: when given,
+    the straggler mask samples from THEM instead of the plan's closure
+    constants — the scenario layer's ground truth, injectable every
+    round without retracing (DESIGN.md §7).
     """
     b_mat = jnp.asarray(b_matrix, jnp.float32)
 
-    def coded_step(params, opt_state, batch, key, deadline):
+    def coded_step(params, opt_state, batch, key, deadline,
+                   true_params=None):
         if batch.get("extras") is not None:
             raise NotImplementedError(
                 "coded training does not partition family extras yet"
@@ -190,7 +208,13 @@ def make_coded_train_step_fn(
 
         grads_k, metrics_k = jax.vmap(part_grad)(tp, lp)
 
-        wmask = executor.finish_mask_jit(key, deadline)  # (W,) workers
+        if true_params is None:
+            wmask = executor.finish_mask_jit(key, deadline)  # (W,) workers
+        else:
+            mus_w, alphas_w, shift_w = true_params
+            wmask = executor.finish_mask_jit(
+                key, deadline, mus=mus_w, alphas=alphas_w, shifts=shift_w
+            )
         row_alive = executor.slot_mask_jit(wmask)  # (n,) coded rows
         a, ok = decode_vector_jit(b_mat, row_alive)
         w_part = a @ b_mat  # (k,) partition weights; == 1 when decodable
@@ -231,6 +255,15 @@ class Trainer:
     skip-step fallback included. ``self.traces`` counts (re)traces so
     tests can assert the step never re-enters Python. ``replan``
     rebuilds the program on membership changes, scheme params preserved.
+
+    Cluster dynamics close the loop (DESIGN.md §7):
+    ``TrainConfig(scenario=...)`` drifts the TRUE cluster over the run
+    (straggler masks sample from the drifted parameters, injected as
+    per-round arrays — no retrace), and ``adapt_every=R`` attaches an
+    ``AdaptiveController`` that observes every round's worker times,
+    re-estimates (mu, alpha, bandwidth), and replans + recompiles when
+    the hysteresis rule fires — the replans land in telemetry as
+    ``adapt_decision`` events.
     """
 
     def __init__(self, model: Model, data, opt_cfg: AdamWConfig, cfg: TrainConfig):
@@ -258,10 +291,22 @@ class Trainer:
                     f"partitions ({k}) must divide the global batch ({gb})"
                 )
             self.partitions = int(k)
+        if cfg.cluster is None and (
+            cfg.scenario is not None or cfg.adapt_every is not None
+        ):
+            raise ValueError(
+                "scenario / adapt_every require coded training (cfg.cluster)"
+            )
+        if cfg.adapt_every is not None and cfg.adapt_every <= 0:
+            raise ValueError(
+                f"adapt_every must be a positive cadence, got {cfg.adapt_every}"
+            )
         self.telemetry = Telemetry(cfg.telemetry_path)
         self._ckpt = (
             AsyncCheckpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
         )
+        self.controller = None
+        self.trace = None
         if cfg.cluster is not None:
             self.executor = CodedRoundExecutor(
                 cfg.cluster,
@@ -271,6 +316,35 @@ class Trainer:
                 deadline_safety=cfg.deadline_safety,
             )
             self._build_coded_step()
+            if cfg.scenario is not None:
+                from repro.sim import ScenarioSpec, make_scenario
+
+                # a registered name is built AT the step budget so the
+                # factories anchor event times/drift rates to the run
+                # length (a 120-round spec clamped to 8 steps would
+                # never reach its events); an explicit ScenarioSpec
+                # keeps its own horizon — the caller placed the events
+                spec = (
+                    cfg.scenario
+                    if isinstance(cfg.scenario, ScenarioSpec)
+                    else make_scenario(str(cfg.scenario), horizon=cfg.steps)
+                )
+                self.trace = spec.trace(
+                    cfg.cluster, seed=cfg.seed, horizon=cfg.steps
+                )
+            if cfg.adapt_every is not None:
+                from repro.runtime.control import AdaptConfig, AdaptiveController
+
+                self.controller = AdaptiveController(
+                    self.executor,
+                    AdaptConfig(
+                        every=cfg.adapt_every,
+                        threshold=cfg.adapt_threshold,
+                        replan_cost=cfg.adapt_replan_cost,
+                    ),
+                    telemetry=self.telemetry,
+                    on_replan=self._build_coded_step,
+                )
         else:
             self.step_fn = make_train_step(model, opt_cfg)
 
@@ -288,9 +362,10 @@ class Trainer:
             self.partitions,
         )
 
-        def counted(params, opt_state, batch, key, deadline):
+        def counted(params, opt_state, batch, key, deadline,
+                    true_params=None):
             self.traces += 1  # python side effect: runs only while tracing
-            return raw(params, opt_state, batch, key, deadline)
+            return raw(params, opt_state, batch, key, deadline, true_params)
 
         self.coded_step_fn = jax.jit(counted, donate_argnums=(0, 1))
 
@@ -340,11 +415,28 @@ class Trainer:
         for step in range(start, self.cfg.steps):
             batch = self.data.next_batch()
             if coded:
-                params, opt_state, metrics = self.coded_step_fn(
-                    params, opt_state, batch,
-                    jax.random.fold_in(step_key, step),
-                    jnp.float32(self.executor.deadline),
+                skey = jax.random.fold_in(step_key, step)
+                # scenario ground truth: this round's straggling samples
+                # from the TRUE (drifted) cluster while loads/deadline
+                # stay whatever the current plan believes
+                true_params = (
+                    self.executor.worker_param_arrays(self.trace.at(step))
+                    if self.trace is not None else None
                 )
+                params, opt_state, metrics = self.coded_step_fn(
+                    params, opt_state, batch, skey,
+                    jnp.float32(self.executor.deadline),
+                    true_params,
+                )
+                if self.controller is not None:
+                    # the controller observes the SAME per-worker times
+                    # the compiled step's finish mask was drawn from
+                    # (same key, same sampler) — a true closed loop
+                    self.controller.observe_truth(
+                        skey,
+                        self.trace.at(step)
+                        if self.trace is not None else None,
+                    )
             else:
                 params, opt_state, metrics = self.step_fn(
                     params, opt_state, batch

@@ -1,0 +1,41 @@
+"""Cluster-dynamics scenario subsystem (DESIGN.md §7).
+
+Generates the non-stationary conditions — straggler drift, worker churn,
+bandwidth collapse, correlated rack incidents — that the closed-loop
+adaptive controller (``repro.runtime.control``) must survive. Scenarios
+are seeded and deterministic; the registry mirrors the allocation-scheme
+registry.
+"""
+from repro.sim.events import (
+    BadRack,
+    BandwidthFade,
+    Event,
+    MuRandomWalk,
+    MuStep,
+    TraceState,
+    WorkerChurn,
+)
+from repro.sim.scenario import (
+    ClusterTrace,
+    ScenarioSpec,
+    make_scenario,
+    register_scenario,
+    scenario_kinds,
+    scenario_names,
+)
+
+__all__ = [
+    "BadRack",
+    "BandwidthFade",
+    "ClusterTrace",
+    "Event",
+    "MuRandomWalk",
+    "MuStep",
+    "ScenarioSpec",
+    "TraceState",
+    "WorkerChurn",
+    "make_scenario",
+    "register_scenario",
+    "scenario_kinds",
+    "scenario_names",
+]

@@ -1,0 +1,341 @@
+"""Cluster-dynamics scenarios + closed-loop adaptive replanning (§7).
+
+Deterministic scenario replay: traces are exact functions of
+(spec, base, seed), the controller's decision metric is the noise-free
+mean-field ``coverage_latency``, and the observation stream is seeded —
+so every assertion below is a replayable regression, not a flaky MC
+bound. Covers the ISSUE acceptance set: the controller replans on a mu
+step-change, holds under hysteresis on noise-only traces, and preserves
+scheme params across every replan for ALL registered schemes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from test_scheme_invariants import instantiate
+
+from repro.core.runtime_model import ClusterSpec
+from repro.core.schemes import make_scheme, scheme_names
+from repro.runtime.control import (
+    AdaptConfig,
+    AdaptiveController,
+    coverage_latency,
+    replan_decision,
+)
+from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.fault_tolerance import StragglerTracker
+from repro.runtime.telemetry import Telemetry
+from repro.sim import (
+    BadRack,
+    MuRandomWalk,
+    MuStep,
+    ScenarioSpec,
+    WorkerChurn,
+    make_scenario,
+    scenario_names,
+)
+
+KEY = jax.random.PRNGKey(11)
+BASE = ClusterSpec.make([8, 16, 8], [4.0, 1.0, 0.25], 1.0, [16.0, 8.0, 4.0])
+K = 1_000
+
+
+# ------------------------------------------------------------- scenarios
+def test_traces_deterministic_and_seed_sensitive():
+    spec = make_scenario("mu_drift", horizon=40)
+    t1 = spec.trace(BASE, seed=5)
+    t2 = spec.trace(BASE, seed=5)
+    t3 = spec.trace(BASE, seed=6)
+    assert t1.clusters == t2.clusters
+    assert t1.clusters != t3.clusters
+    assert t1.horizon == 40
+    # clamped indexing never raises
+    assert t1.at(-3) == t1.clusters[0]
+    assert t1.at(10_000) == t1.clusters[-1]
+
+
+def test_registry_mirrors_scheme_registry_semantics():
+    names = scenario_names()
+    for required in ("static", "noise", "mu_drift", "mu_step", "churn",
+                     "bw_collapse", "bad_rack"):
+        assert required in names
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("no_such_scenario")
+    with pytest.raises(ValueError, match="does not accept"):
+        make_scenario("static", bogus_param=3)
+    # None params mean "not provided" (CLI passes flags unconditionally)
+    assert make_scenario("mu_step", horizon=None).horizon == 120
+
+
+def test_event_primitives_validate():
+    with pytest.raises(ValueError, match="sigma"):
+        MuRandomWalk(sigma=-0.1)
+    with pytest.raises(ValueError, match="factor"):
+        MuStep(at=3, group=0, factor=0.0)
+    with pytest.raises(ValueError, match="frac"):
+        WorkerChurn(at=3, group=0, frac=0.0)
+    with pytest.raises(ValueError, match="start < end"):
+        BadRack(start=10, end=10, group=0)
+
+
+def test_windowed_event_restores_state():
+    """A bad-rack window perturbs DURING the window and undoes itself."""
+    spec = ScenarioSpec(
+        name="w", kind="drift",
+        events=(BadRack(start=5, end=10, group=0, mu_factor=0.1,
+                        bw_factor=0.1),),
+        horizon=20,
+    )
+    tr = spec.trace(BASE, seed=0)
+    assert tr.at(0) == BASE
+    inside = tr.at(7).groups[0]
+    assert inside.mu == pytest.approx(BASE.groups[0].mu * 0.1)
+    assert inside.bandwidth == pytest.approx(BASE.groups[0].bandwidth * 0.1)
+    after = tr.at(12).groups[0]
+    assert after.mu == pytest.approx(BASE.groups[0].mu)
+    assert after.bandwidth == pytest.approx(BASE.groups[0].bandwidth)
+
+
+def test_churn_changes_membership_and_never_empties_groups():
+    spec = make_scenario("churn", horizon=40)
+    tr = spec.trace(BASE, seed=0)
+    before, during = tr.membership(5), tr.membership(15)
+    assert during[1] < before[1]
+    assert all(m >= 1 for c in tr.clusters for m in
+               (g.num_workers for g in c.groups))
+    # the join burst restores the ORIGINAL capacity (frac compounds on
+    # the shrunken size, so the factory uses f/(1-f) for the rejoin)
+    assert tr.membership(35) == tr.membership(5)
+
+
+# ------------------------------------------------- decision metric / rule
+def test_coverage_latency_matches_analytic_t_star():
+    """At the optimal loads the mean-field fixed point recovers T*."""
+    sch = make_scheme("optimal")
+    plan = sch.allocate(BASE, K)
+    lat = coverage_latency(BASE, plan.loads, K)
+    assert lat == pytest.approx(float(plan.t_star), rel=1e-5)
+
+
+def test_coverage_latency_infeasible_loads_are_inf():
+    # loads too small to ever cover k
+    assert np.isinf(coverage_latency(BASE, [1.0, 1.0, 1.0], K))
+
+
+def test_decision_rule_membership_always_replans():
+    sch = make_scheme("optimal")
+    exe = CodedRoundExecutor(BASE, K, "optimal")
+    groups = list(BASE.groups)
+    groups[1] = dataclasses.replace(groups[1], num_workers=10)
+    d = replan_decision(sch, exe.plan, ClusterSpec(tuple(groups)),
+                        threshold=1e9)  # threshold can never be cleared
+    assert d.replanned and d.reason == "membership"
+
+
+def test_decision_rule_exact_threshold_crossing_replans():
+    """gain == threshold replans (inclusive crossing), gain < holds."""
+    sch = make_scheme("optimal")
+    exe = CodedRoundExecutor(BASE, K, "optimal")
+    groups = list(BASE.groups)
+    groups[0] = dataclasses.replace(groups[0], mu=groups[0].mu * 0.05)
+    drifted = ClusterSpec(tuple(groups))
+    probe = replan_decision(sch, exe.plan, drifted, threshold=0.0)
+    assert probe.gain > 0
+    at = replan_decision(sch, exe.plan, drifted, threshold=probe.gain)
+    assert at.replanned and at.reason == "improvement"
+    above = replan_decision(sch, exe.plan, drifted,
+                            threshold=np.nextafter(probe.gain, 2.0))
+    assert not above.replanned and above.reason == "hold"
+
+
+def test_decision_rule_replan_cost_gates_small_absolute_gains():
+    sch = make_scheme("optimal")
+    exe = CodedRoundExecutor(BASE, K, "optimal")
+    groups = list(BASE.groups)
+    groups[0] = dataclasses.replace(groups[0], mu=groups[0].mu * 0.05)
+    drifted = ClusterSpec(tuple(groups))
+    free = replan_decision(sch, exe.plan, drifted, threshold=0.05,
+                           replan_cost=0.0, horizon=10)
+    assert free.replanned
+    # absolute saving * horizon below the recompile cost: hold
+    saving = (free.current - free.candidate) * 10
+    costly = replan_decision(sch, exe.plan, drifted, threshold=0.05,
+                             replan_cost=saving * 1.01, horizon=10)
+    assert not costly.replanned
+
+
+# ------------------------------------------------- closed-loop replays
+def _drive(name, scheme, *, horizon=60, every=5, threshold=0.05, seed=0,
+           telemetry=None, k=K):
+    """Replay one scenario through the full observe->estimate->act loop."""
+    spec = make_scenario(name, horizon=horizon)
+    trace = spec.trace(BASE, seed=seed)
+    exe = CodedRoundExecutor(BASE, k, scheme)
+    ctl = AdaptiveController(
+        exe, AdaptConfig(every=every, threshold=threshold),
+        telemetry=telemetry,
+    )
+    for t in range(trace.horizon):
+        ctl.observe_truth(jax.random.fold_in(KEY, 1_000 + t), trace.at(t))
+    return ctl, trace
+
+
+def test_controller_replans_on_mu_step_change():
+    """ISSUE acceptance: a mu step-change triggers a replan soon after."""
+    ctl, _ = _drive("mu_step", "optimal")
+    replans = [d for d in ctl.decisions if d.replanned]
+    assert replans, "controller never replanned on a 20x mu collapse"
+    # the step lands at horizon//3 = 20; the replan must come after it
+    # and within a few cadence periods (estimates need a few rounds)
+    assert 20 < replans[0].round <= 40
+    assert replans[0].reason == "improvement"
+    # the new plan shifts load off the collapsed group
+    old = ctl.executor.engine.scheme.allocate(BASE, K).loads
+    new = ctl.plan.allocation.loads
+    assert new[0] < old[0]
+
+
+def test_controller_holds_under_hysteresis_on_noise_only_trace():
+    """ISSUE acceptance: estimation noise alone never triggers a replan."""
+    for seed in (0, 1, 2):
+        ctl, _ = _drive("noise", "optimal", seed=seed)
+        assert ctl.replans == 0, (
+            f"seed {seed}: replanned on noise-only trace: {ctl.decisions}"
+        )
+        assert all(d.reason == "hold" for d in ctl.decisions)
+
+
+def test_controller_membership_replans_on_churn():
+    ctl, trace = _drive("churn", "optimal")
+    reasons = [d.reason for d in ctl.decisions if d.replanned]
+    assert "membership" in reasons
+    # after the final join burst the controller's plan covers the full
+    # restored fleet (joins become load-bearing only through a replan)
+    assert ctl.plan.num_workers == sum(trace.membership(trace.horizon - 1))
+
+
+@pytest.mark.parametrize("name", scheme_names())
+def test_replan_preserves_scheme_params_for_all_registered_schemes(name):
+    """ISSUE acceptance: every registered scheme survives controller
+    replans with its typed params intact (zero edits for new schemes)."""
+    scheme = instantiate(name, BASE, K)
+    exe = CodedRoundExecutor(BASE, K, scheme)
+    ctl = AdaptiveController(exe, AdaptConfig(every=1, threshold=0.05))
+    # force a membership-change replan via the registration feed
+    times = np.asarray(exe.sample_round_times(KEY))
+    counts = [g.num_workers for g in BASE.groups]
+    counts[1] -= 2
+    d = ctl.observe_round(times, membership=counts)
+    assert d is not None and d.replanned and d.reason == "membership"
+    assert exe.engine.scheme == scheme, name
+    assert exe.plan.scheme_obj == scheme, name
+    assert exe.num_workers == sum(counts)
+
+
+def test_controller_decisions_land_in_telemetry(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    with Telemetry(path) as tel:
+        ctl, _ = _drive("mu_step", "optimal", telemetry=tel, horizon=30)
+    recs = [e for e in tel.events if e["event"] == "adapt_decision"]
+    assert len(recs) == len(ctl.decisions) == 6  # horizon 30 / cadence 5
+    # monotonic t stamps make the decision stream totally ordered
+    ts = [r["t"] for r in recs]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts)
+    for r in recs:
+        for field in ("round", "replanned", "reason", "gain", "deadline",
+                      "workers"):
+            assert field in r, r
+
+
+def test_tracker_rebind_preserves_estimates_and_resizes():
+    tracker = StragglerTracker(BASE, forget=0.5)
+    times = np.asarray(
+        CodedRoundExecutor(BASE, K, "optimal").sample_round_times(KEY)
+    )
+    loads = CodedRoundExecutor(BASE, K, "optimal").plan.loads_per_worker
+    tracker.observe_round(times, np.asarray(loads), K)
+    mu_before = tracker.mu_estimates
+    groups = list(BASE.groups)
+    groups[1] = dataclasses.replace(groups[1], num_workers=10)
+    smaller = ClusterSpec(tuple(groups))
+    est = tracker.estimated_cluster()  # embeds the current estimates
+    tracker.rebind(smaller.with_bandwidths([g.bandwidth
+                                            for g in est.groups]))
+    assert tracker.cluster.total_workers == smaller.total_workers
+    assert tracker._missed.shape == (smaller.total_workers,)
+    # estimates come from the new spec (which the controller builds FROM
+    # the estimates), so a spec-value rebind keeps them
+    np.testing.assert_allclose(tracker.mu_estimates,
+                               [g.mu for g in smaller.groups])
+    assert mu_before.shape == tracker.mu_estimates.shape
+
+
+# --------------------------------------------- trainer closed loop (e2e)
+def test_trainer_adaptive_scenario_replans_and_recompiles():
+    """End to end: scenario drift -> controller replan -> step recompile,
+    scheme params preserved, training stays finite."""
+    from repro.configs import ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.data import SyntheticLMData
+    from repro.models.model import Model
+    from repro.optim import AdamWConfig
+    from repro.runtime.train_loop import TrainConfig, Trainer
+
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    data = SyntheticLMData(c, ShapeConfig("t", 16, 4, "train"), seed=1)
+    cluster = ClusterSpec.make([4, 4], [4.0, 0.5])
+    cfg = TrainConfig(
+        steps=10, log_every=1, cluster=cluster, scheme="grad_coding",
+        scenario="mu_step", adapt_every=2, adapt_threshold=0.05,
+    )
+    t = Trainer(m, data, AdamWConfig(lr=1e-3, warmup_steps=0,
+                                     total_steps=10), cfg)
+    scheme_before = t.executor.engine.scheme
+    # the scenario is built AT the trainer's step budget, so the mu step
+    # fires at steps//3 = 3 (not at a never-reached default-horizon time)
+    assert t.trace.change_rounds() == (3,)
+    _, _, history = t.run()
+    assert all(np.isfinite(h["loss"]) for h in history)
+    assert t.controller is not None and len(t.controller.decisions) == 5
+    replans = [d for d in t.controller.decisions if d.replanned]
+    assert replans, "mu_step scenario never triggered a trainer replan"
+    # the replans respond to the step change, not to pre-step noise
+    assert all(d.round > 3 for d in replans)
+    # every replan recompiled the coded step (trace per program build)
+    assert t.traces == 1 + len(replans)
+    assert t.executor.engine.scheme == scheme_before
+    # decisions were surfaced through telemetry with monotonic t
+    recs = [e for e in t.telemetry.events if e["event"] == "adapt_decision"]
+    assert len(recs) == 5
+
+
+def test_trainer_scenario_requires_cluster():
+    from repro.configs import ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.data import SyntheticLMData
+    from repro.models.model import Model
+    from repro.optim import AdamWConfig
+    from repro.runtime.train_loop import TrainConfig, Trainer
+
+    c = ARCHS["qwen3-0.6b"].reduced()
+    data = SyntheticLMData(c, ShapeConfig("t", 16, 4, "train"), seed=1)
+    with pytest.raises(ValueError, match="require coded training"):
+        Trainer(Model(c), data,
+                AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=5),
+                TrainConfig(steps=5, scenario="mu_step"))
+
+
+# ----------------------------------------------- fig_adapt acceptance
+def test_fig_adapt_acceptance_reduced(tmp_path, monkeypatch):
+    """The benchmark's own acceptance gates on a short horizon."""
+    import benchmarks.common as bench_common
+    from benchmarks import fig_adapt
+
+    monkeypatch.setattr(bench_common, "ARTIFACTS", str(tmp_path))
+    rec = fig_adapt.run(verbose=False, horizon=36,
+                        scenarios=["static", "noise", "mu_step", "churn"])
+    assert rec["adaptive_within_1p5x_oracle"], rec
+    assert rec["adaptive_beats_static_on_dynamic"], rec
+    assert rec["no_replans_on_control"], rec

@@ -115,6 +115,117 @@ def test_deadline_positive():
     assert deadline_for(plan) > plan.t_star > 0
 
 
+# ------------------------------------------- elastic-controller hysteresis
+def _converged_tracker(cluster, k=512, rounds=60, seed=3):
+    """Tracker whose estimates have settled on the cluster's true params."""
+    from repro.core.runtime_model import sample_worker_times
+
+    plan = plan_deployment(cluster, k=k)
+    tracker = StragglerTracker(cluster, forget=0.5)
+    loads = jnp.asarray(plan.loads_per_worker, jnp.float32)
+    mus = jnp.concatenate([jnp.full((g.num_workers,), g.mu)
+                           for g in cluster.groups])
+    alphas = jnp.ones(cluster.total_workers)
+    t = np.asarray(sample_worker_times(
+        jax.random.PRNGKey(seed), loads, mus, alphas, k, rounds
+    ))
+    for i in range(rounds):
+        tracker.observe_round(t[i], np.asarray(plan.loads_per_worker), k)
+    return tracker
+
+
+def test_elastic_controller_noop_updates_hold_under_hysteresis():
+    """Repeated estimate updates with an unchanged fleet never replan."""
+    cluster = ClusterSpec.make([10, 10], [2.0, 1.0])
+    tracker = _converged_tracker(cluster)
+    ctl = ElasticController(cluster, k=512, threshold=0.05)
+    for _ in range(5):
+        ctl.on_estimates_update(tracker)
+    assert ctl.replans == 0
+    assert ctl.last_decision is not None
+    assert ctl.last_decision.reason == "hold"
+
+
+def test_elastic_controller_exact_threshold_crossing_replans():
+    """An estimate update whose gain lands exactly ON the threshold acts."""
+    cluster = ClusterSpec.make([10, 10], [4.0, 1.0])
+    slowed = ClusterSpec.make([10, 10], [0.2, 1.0])  # group 0 collapsed
+    tracker = _converged_tracker(slowed)
+    probe = ElasticController(cluster, k=512, threshold=0.0)
+    probe.on_estimates_update(tracker)
+    gain = probe.last_decision.gain
+    assert gain > 0
+    at = ElasticController(cluster, k=512, threshold=gain)
+    at.on_estimates_update(tracker)
+    assert at.replans == 1  # inclusive crossing
+    above = ElasticController(
+        cluster, k=512, threshold=np.nextafter(gain, 2.0)
+    )
+    above.on_estimates_update(tracker)
+    assert above.replans == 0
+
+
+def test_elastic_controller_membership_change_always_replans():
+    """A dead worker forces a replan even with an uncrossable threshold."""
+    cluster = ClusterSpec.make([10, 10], [2.0, 1.0])
+    tracker = StragglerTracker(cluster, fail_after=2)
+    plan0 = plan_deployment(cluster, k=100)
+    times = np.ones(20)
+    times[3] = np.inf
+    loads = np.asarray(plan0.loads_per_worker)
+    tracker.observe_round(times, loads, 100)
+    tracker.observe_round(times, loads, 100)
+    ctl = ElasticController(cluster, k=100, threshold=1e9)
+    new_plan = ctl.on_estimates_update(tracker)
+    assert ctl.replans == 1
+    assert ctl.last_decision.reason == "membership"
+    assert new_plan.num_workers == 19
+
+
+def test_elastic_controller_legacy_default_always_replans():
+    """threshold=None (the default) keeps replan-on-every-update."""
+    cluster = ClusterSpec.make([10, 10], [2.0, 1.0])
+    tracker = _converged_tracker(cluster)
+    ctl = ElasticController(cluster, k=512)
+    ctl.on_estimates_update(tracker)
+    ctl.on_estimates_update(tracker)
+    assert ctl.replans == 2
+
+
+# --------------------------------------------------- ClusterSpec.parse
+def test_cluster_parse_accepts_well_formed_specs():
+    c = ClusterSpec.parse("6:2.0,6:0.5:8.0", 2.0)
+    assert c.groups[0].num_workers == 6
+    assert c.groups[0].bandwidth == 2.0  # default applied
+    assert c.groups[1].bandwidth == 8.0
+
+
+@pytest.mark.parametrize("spec,match", [
+    ("0:2.0", "worker count must be a positive"),
+    ("-3:2.0", "worker count must be a positive"),
+    ("2.5:2.0", "worker count '2.5' is not an integer"),
+    ("x:2.0", "worker count 'x' is not an integer"),
+    ("4:0", "mu must be > 0"),
+    ("4:-1.0", "mu must be > 0"),
+    ("4:fast", "mu 'fast' is not a number"),
+    ("4:2.0:0", "bandwidth must be > 0"),
+    ("4:2.0:-8", "bandwidth must be > 0"),
+    ("4:2.0:wide", "bandwidth 'wide' is not a number"),
+    ("4", "expected N:mu or N:mu:bandwidth"),
+    ("4:2.0:8.0:9.0", "expected N:mu or N:mu:bandwidth"),
+    ("6:2.0,,6:0.5", "expected N:mu or N:mu:bandwidth"),
+])
+def test_cluster_parse_rejects_malformed_specs(spec, match):
+    """Actionable errors instead of bare int()/float() tracebacks."""
+    with pytest.raises(ValueError, match=match):
+        ClusterSpec.parse(spec)
+
+
+def test_cluster_parse_rejects_bad_default_bandwidth():
+    with pytest.raises(ValueError, match="default bandwidth must be > 0"):
+        ClusterSpec.parse("4:2.0", 0.0)
+
+
 # ------------------------------------------------------------ coded serving
 def test_coded_lm_head_exact_recovery_all_finish():
     c = ARCHS["granite-3-2b"].reduced()
