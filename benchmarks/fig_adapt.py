@@ -56,19 +56,15 @@ SAFETY = 3.0
 BASE = ClusterSpec.make([8, 16, 8], [4.0, 1.0, 0.25], 1.0, [16.0, 8.0, 4.0])
 
 
-#: (scheme, cluster, k) -> real per-group loads. Scenario traces revisit
-#: the same cluster for long stretches (steps, windows, churn plateaus),
-#: and scheme objects/ClusterSpecs are frozen+hashable, so the oracle's
-#: every-round replan collapses to one allocation per distinct state.
-_ALLOC_CACHE: dict = {}
-
-
 def _oracle_loads(scheme, cluster, k) -> np.ndarray:
-    key = (scheme, cluster, k)
-    if key not in _ALLOC_CACHE:
-        _ALLOC_CACHE[key] = np.asarray(scheme.allocate(cluster, k).loads,
-                                       float)
-    return _ALLOC_CACHE[key]
+    """Real per-group loads of a fresh solve on (cluster, k).
+
+    Scenario traces revisit the same cluster for long stretches (steps,
+    windows, churn plateaus); ``AllocationScheme.allocate`` is memoized
+    on (scheme, cluster, k), so the oracle's every-round replan
+    collapses to one allocation per distinct state for free.
+    """
+    return np.asarray(scheme.allocate(cluster, k).loads, float)
 
 
 def _policy_eval(true_cluster, loads, k, deadline, scheme):

@@ -1,6 +1,7 @@
 """Run every paper-figure benchmark + the roofline report.
 
 ``PYTHONPATH=src python -m benchmarks.run [--only fig4,fig9] [--skip roofline]``
+(``--list`` prints the registered benchmark names and exits.)
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ from benchmarks import (
     fig_comm,
     fig_grad,
     roofline,
+    serve_frontend,
     serve_throughput,
 )
 
@@ -31,13 +33,19 @@ def main():
     ap.add_argument("--skip", default=None,
                     help="comma-separated subset to leave out, e.g. "
                          "serve_throughput,roofline")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
     args = ap.parse_args()
     mods = {
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
         "fig_comm": fig_comm, "fig_grad": fig_grad, "fig_adapt": fig_adapt,
         "roofline": roofline, "serve_throughput": serve_throughput,
+        "serve_frontend": serve_frontend,
     }
+    if args.list:
+        print("\n".join(mods))
+        return
     names = args.only.split(",") if args.only else list(mods)
     skips = args.skip.split(",") if args.skip else []
     unknown = [n for n in names + skips if n not in mods]

@@ -42,6 +42,22 @@ from repro.core.runtime_model import (
 )
 
 
+#: allocate() memoization (see AllocationScheme.allocate). Keys are
+#: (scheme, cluster, k) — schemes and ClusterSpec are frozen dataclasses,
+#: so equality covers every parameter that feeds the solve.
+_ALLOC_CACHE: dict = {}
+_ALLOC_CACHE_CAP = 512
+
+
+def allocate_cache_clear() -> None:
+    """Drop all memoized allocations (tests / manual invalidation)."""
+    _ALLOC_CACHE.clear()
+
+
+def allocate_cache_info() -> dict:
+    return {"size": len(_ALLOC_CACHE), "cap": _ALLOC_CACHE_CAP}
+
+
 @dataclasses.dataclass(frozen=True)
 class AllocationScheme:
     """Base class for typed, registered load-allocation schemes.
@@ -69,9 +85,31 @@ class AllocationScheme:
         raise NotImplementedError
 
     def allocate(self, cluster: ClusterSpec, k: int) -> AllocationPlan:
-        """Per-group real/integer loads for ``cluster``; attaches self."""
-        plan = self._allocate(cluster, k)
-        return dataclasses.replace(plan, scheme_obj=self, scheme=self.tag)
+        """Per-group real/integer loads for ``cluster``; attaches self.
+
+        Memoized on (scheme params, cluster, k) — all frozen/hashable —
+        so per-admission coverage checks and oracle sweeps don't re-pay
+        the eager Lambert-W solve. A membership change IS a different
+        ``cluster`` key, so stale plans can never be served; the cache
+        evicts FIFO at ``_ALLOC_CACHE_CAP`` entries
+        (``allocate_cache_clear`` / ``allocate_cache_info`` to manage).
+        ``scheme_obj``/``scheme`` are re-attached on every return, cache
+        hit or miss, so plan identity semantics (``plan.scheme_obj is
+        scheme``) are preserved.
+        """
+        cache_key = (self, cluster, int(k))
+        plan = _ALLOC_CACHE.get(cache_key)
+        if plan is None:
+            plan = self._allocate(cluster, k)
+            if len(_ALLOC_CACHE) >= _ALLOC_CACHE_CAP:
+                _ALLOC_CACHE.pop(next(iter(_ALLOC_CACHE)))
+            _ALLOC_CACHE[cache_key] = plan
+        # fresh array views per call: a caller mutating plan.loads must
+        # not corrupt the cached solve
+        return dataclasses.replace(
+            plan, loads=plan.loads.copy(), loads_int=plan.loads_int.copy(),
+            r=plan.r.copy(), scheme_obj=self, scheme=self.tag,
+        )
 
     def replan(self, new_cluster: ClusterSpec, k: int) -> AllocationPlan:
         """Closed-form re-plan on a new membership, params preserved."""

@@ -21,6 +21,7 @@ from repro.core.schemes import make_scheme, scheme_names
 from repro.data.pipeline import make_extras
 from repro.models.model import Model
 from repro.runtime.serve_loop import ServeConfig, Server
+from repro.serve import make_workload, workload_names
 from repro.sim import make_scenario, scenario_names
 
 
@@ -70,7 +71,32 @@ def main():
     ap.add_argument("--rounds", type=int, default=None,
                     help="serve rounds to run under --scenario (default: "
                          "min(scenario horizon, 24))")
+    ap.add_argument("--trace", default=None, choices=workload_names(),
+                    help="continuous-batching mode: replay this seeded "
+                         "request workload through Server.serve instead "
+                         "of one fixed-batch generate")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="requests per decode round for --trace workloads "
+                         "that accept it (poisson, chat)")
+    ap.add_argument("--num-requests", type=int, default=None,
+                    help="trace length for --trace (default: the "
+                         "workload preset)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="in-flight stream slots for --trace")
+    ap.add_argument("--admission-threshold", type=float, default=1.0,
+                    help="admission-control strictness for --trace "
+                         "(higher sheds earlier; deadline budgets are "
+                         "divided by it)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="workload trace seed for --trace")
     args = ap.parse_args()
+    if args.trace is not None and args.scenario is not None:
+        raise SystemExit("--trace and --scenario are separate serving "
+                         "modes; pick one")
+    if args.trace is not None and args.legacy_decode:
+        raise SystemExit("--trace requires the jit pipeline "
+                         "(continuous batching splices into compiled "
+                         "programs); drop --legacy-decode")
     if args.scenario is not None and not args.coded:
         raise SystemExit("--scenario requires --coded (a fleet to perturb)")
     if args.adapt_every is not None and args.scenario is None:
@@ -104,6 +130,9 @@ def main():
               f"loads/worker={h.plan.loads_per_worker.tolist()}, "
               f"deadline={h.deadline:.4f}")
 
+    if args.trace is not None:
+        _serve_trace(server, args, config)
+        return
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, config.vocab_size
     ).astype(jnp.int32)
@@ -119,6 +148,38 @@ def main():
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s)")
     print("sample:", out[0, -args.max_new:].tolist())
+
+
+def _serve_trace(server, args, config):
+    """Continuous-batching mode: replay a seeded workload end to end.
+
+    Requests are admitted into ``--slots`` in-flight stream slots by the
+    ``SlotScheduler`` (deadline-class priority, load shedding at
+    ``--admission-threshold``); per-request latency is reported in
+    virtual rounds (1 decode step = 1 round, 1 batched prefill = 1
+    round), throughput in wall-clock tokens/s.
+    """
+    wl = make_workload(
+        args.trace, arrival_rate=args.arrival_rate,
+        num_requests=args.num_requests, vocab=config.vocab_size,
+    )
+    trace = wl.trace(seed=args.trace_seed)
+    rep = server.serve(
+        trace, slots=args.slots,
+        admission_threshold=args.admission_threshold,
+    )
+    lat = rep.latencies()
+    print(f"workload {wl.name!r}: {len(trace)} requests "
+          f"(rate={wl.arrival_rate}/round, seed={args.trace_seed})")
+    print(f"served {rep.admitted} ({rep.shed} shed), {rep.tokens} tokens "
+          f"in {rep.rounds:.0f} rounds "
+          f"({rep.prefill_rounds} prefill + {rep.decode_rounds} decode) "
+          f"/ {rep.wall_s:.2f}s = {rep.tokens_per_s:.1f} tok/s")
+    if len(lat):
+        import numpy as np
+
+        print(f"latency rounds: p50={np.percentile(lat, 50):.1f} "
+              f"p99={np.percentile(lat, 99):.1f}")
 
 
 def _serve_scenario(server, prompts, extras, args, cluster):

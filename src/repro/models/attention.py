@@ -181,13 +181,18 @@ def attention(
     num_heads, num_kv_heads, head_dim,
     causal=True, window=None, use_rope=True, rope_theta=10_000.0,
     xkv=None, kv_positions=None, q_block=512, kv_block=1024,
-    causal_skip=False,
+    causal_skip=False, return_kv=False,
 ):
     """Full attention layer (train/prefill). x: (B, S, D).
 
     Sequences that do not divide the block sizes are padded: queries with
     continuation positions (output sliced back), keys with position -1
     (masked inside the online softmax).
+
+    ``return_kv``: additionally return the post-rope (B, S, KV, hd) key
+    and value tensors — exactly what ``decode_attention`` would have
+    written into its cache one position at a time, so a batched prefill
+    can fill a decode cache from this single pass (DESIGN.md §4/§10).
     """
     xkv = x if xkv is None else xkv
     kv_positions = positions if kv_positions is None else kv_positions
@@ -198,6 +203,7 @@ def attention(
                  rope_theta)
         k = rope(k, jnp.broadcast_to(kv_positions, xkv.shape[:1] + kv_positions.shape[-1:]),
                  rope_theta)
+    k_cache, v_cache = k, v  # pre-padding views (the decode-cache payload)
     b, s = x.shape[:2]
     skv = k.shape[1]
     qb = min(q_block, s)
@@ -224,7 +230,10 @@ def attention(
     )
     if pad_q:
         out = out[:, :s]
-    return out.reshape(b, s, num_heads * head_dim) @ params["wo"].astype(x.dtype)
+    y = out.reshape(b, s, num_heads * head_dim) @ params["wo"].astype(x.dtype)
+    if return_kv:
+        return y, k_cache, v_cache
+    return y
 
 
 def init_attn_cache(batch, cache_len, num_kv_heads, head_dim, dtype,
@@ -314,3 +323,46 @@ def decode_attention(
     out = out.reshape(b, 1, num_heads * head_dim)
     y = out @ params["wo"].astype(x.dtype)
     return y, new_cache
+
+
+def decode_attention_slots(
+    params, x, cache, pos_map, pos, slot, *,
+    num_heads, num_kv_heads, head_dim,
+    use_rope=True, rope_theta=10_000.0,
+):
+    """Per-slot decode: every batch row advances at its OWN position.
+
+    The continuous-batching serve loop keeps one independent request per
+    batch slot, so unlike ``decode_attention`` (uniform scalar ``pos``
+    for the whole batch) each row writes its new KV at, and attends up
+    to, its own absolute position.
+
+    x: (B, 1, D); cache: {"k", "v"} of shape (B, S, KV, hd);
+    pos_map: (B, S) absolute position held by each cache entry (−1 =
+    empty — the caller computes the post-write map once, it is shared by
+    every layer); pos: (B,) this step's write positions; slot: (B,)
+    cache indices to write (``pos % S``). Returns (y, {"k", "v"}).
+    Rolling/sliding-window caches and int8 KV are not supported here —
+    the slot server allocates full-context caches per slot.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, x, num_heads, num_kv_heads, head_dim)
+    q, k_new = _maybe_qk_norm(params, q, k_new)
+    if use_rope:
+        p = pos[:, None].astype(jnp.int32)  # (B, 1) per-slot positions
+        q = rope(q, p, rope_theta)
+        k_new = rope(k_new, p, rope_theta)
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    g = num_heads // num_kv_heads
+    scale = 1.0 / np.sqrt(head_dim)
+    qr = q.reshape(b, num_kv_heads, g, head_dim)
+    sc = jnp.einsum("bkgh,bskh->bkgs", qr, k).astype(jnp.float32) * scale
+    valid = (pos_map >= 0) & (pos_map <= pos[:, None])  # (B, S)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v)
+    out = out.reshape(b, 1, num_heads * head_dim)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v}

@@ -652,6 +652,191 @@ class Model:
         logits = self._mask_pad_logits(logits[:, 0])
         return logits, cache
 
+    # ------------------------------------------------- slot-resident decode
+    # The continuous-batching serve front-end (runtime/serve_loop.py
+    # ``Server.serve``, DESIGN.md §10) keeps one independent request per
+    # batch slot: each slot has its own sequence length, so the cache
+    # carries per-slot absolute positions and ``decode_step_slots`` takes
+    # a (B,) position vector instead of ``decode_step``'s uniform scalar.
+    # ``prefill`` fills a newly admitted request's per-layer KV from ONE
+    # batched forward pass (the cache-returning path §4 called for)
+    # instead of a per-position decode scan.
+
+    def _check_slot_support(self) -> None:
+        c = self.config
+        if c.family not in ("dense", "vlm", "moe"):
+            raise NotImplementedError(
+                f"slot-resident decode supports the attention-cache "
+                f"families (dense/vlm/moe), not {c.family!r}"
+            )
+        if c.kv_quant:
+            raise NotImplementedError(
+                "slot-resident decode does not support int8 KV caches yet"
+            )
+        if c.sliding_window is not None:
+            raise NotImplementedError(
+                "slot-resident decode allocates full-context caches; "
+                "sliding-window models are not supported yet"
+            )
+
+    def init_slot_cache(self, batch: int, cache_len: int):
+        """Decode state for ``decode_step_slots``: per-slot positions.
+
+        Layout matches ``init_cache``'s attention families except ``pos``
+        is (B, cache_len) — each slot tracks its own absolute positions
+        (−1 = empty). Shared across layers (every layer writes the same
+        positions), so the serve loop can splice a prefilled request into
+        one slot with a single row update.
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        return {
+            "kv": {
+                "k": jnp.zeros(
+                    (c.num_layers, batch, cache_len, c.num_kv_heads, hd),
+                    c.cdtype,
+                ),
+                "v": jnp.zeros(
+                    (c.num_layers, batch, cache_len, c.num_kv_heads, hd),
+                    c.cdtype,
+                ),
+                "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+            }
+        }
+
+    def prefill(self, params, tokens, length):
+        """Batched prefill: one pass -> (last logits, per-layer K/V).
+
+        tokens: (B, S0) int32, right-padded to a fixed prompt capacity;
+        length: (B,) actual prompt lengths. Runs the full-sequence
+        chunked-attention forward ONCE, capturing each layer's post-rope
+        K/V (``attention(return_kv=True)``) — the tensors ``decode_step``
+        would have written into its cache over S0 sequential steps — and
+        returns the logits at each row's last real position (predicting
+        token ``length``). Padded tail positions produce garbage K/V but
+        sit causally AFTER every real query and are masked out of the
+        decode cache by the splice's ``pos = -1`` rows.
+
+        Returns ``(logits (B, V_padded), k (L, B, S0, KV, hd), v ...)``.
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        b, s = tokens.shape
+        x = L.embed(params["embed"], tokens, c.cdtype)
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def attn_with_kv(p, h):
+            y, k, v = attn_mod.attention(
+                p["attn"], L.rmsnorm(p["ln1"], h), positions,
+                num_heads=c.num_heads, num_kv_heads=c.num_kv_heads,
+                head_dim=hd, causal=True, window=c.sliding_window,
+                rope_theta=c.rope_theta, q_block=c.attn_q_block,
+                kv_block=c.attn_kv_block, causal_skip=c.causal_block_skip,
+                return_kv=True,
+            )
+            return h + y, k, v
+
+        if c.family == "moe":
+            def block(p, h):
+                h, k, v = attn_with_kv(p, h)
+                h = h + moe_mod.moe_ffn(
+                    p["moe"], L.rmsnorm(p["ln2"], h),
+                    num_experts=c.num_experts, top_k=c.top_k,
+                    capacity_factor=c.capacity_factor,
+                )
+                return h, k, v
+        else:
+            def block(p, h):
+                h, k, v = attn_with_kv(p, h)
+                h = h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h))
+                return h, k, v
+
+        if c.scan_layers:
+            def body(h, p):
+                h, k, v = block(p, h)
+                return h, (k, v)
+
+            x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        else:
+            k_list, v_list = [], []
+            for i in range(c.num_layers):
+                p = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, k, v = block(p, x)
+                k_list.append(k)
+                v_list.append(v)
+            ks, vs = jnp.stack(k_list), jnp.stack(v_list)
+
+        last = jnp.clip(length - 1, 0, s - 1).astype(jnp.int32)
+        x_last = x[jnp.arange(b), last][:, None]  # (B, 1, D)
+        x_last = L.rmsnorm(params["final_norm"], x_last)
+        logits = L.unembed(
+            params["embed"], x_last, DTYPES_LOGITS[c.logits_dtype]
+        )[:, 0]
+        return self._mask_pad_logits(logits), ks, vs
+
+    def decode_step_slots(self, params, cache, tokens, pos):
+        """One token per slot, each at its OWN position.
+
+        tokens: (B,) int32; pos: (B,) int32 absolute write positions
+        (frozen slots simply rewrite the same entry — idempotent).
+        Returns (logits (B, V_padded), new_cache).
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        x = L.embed(params["embed"], tokens[:, None], c.cdtype)
+        kv = cache["kv"]
+        b, cache_len = kv["pos"].shape
+        pos = jnp.asarray(pos, jnp.int32)
+        bidx = jnp.arange(b)
+        slot = jnp.mod(pos, cache_len).astype(jnp.int32)
+        # one shared position map: every layer writes the same positions
+        pos_map = kv["pos"].at[bidx, slot].set(pos)
+
+        def attn_decode(p, h, kv_slice):
+            y, new = attn_mod.decode_attention_slots(
+                p["attn"], L.rmsnorm(p["ln1"], h), kv_slice, pos_map, pos,
+                slot, num_heads=c.num_heads, num_kv_heads=c.num_kv_heads,
+                head_dim=hd, rope_theta=c.rope_theta,
+            )
+            return h + y, new
+
+        if c.family == "moe":
+            def body(h, inp):
+                p, kv_slice = inp
+                h, new = attn_decode(p, h, kv_slice)
+                h = h + moe_mod.moe_ffn(
+                    p["moe"], L.rmsnorm(p["ln2"], h),
+                    num_experts=c.num_experts, top_k=c.top_k,
+                    capacity_factor=c.capacity_factor,
+                )
+                return h, new
+        else:
+            def body(h, inp):
+                p, kv_slice = inp
+                h, new = attn_decode(p, h, kv_slice)
+                h = h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h))
+                return h, new
+
+        layer_kv = {"k": kv["k"], "v": kv["v"]}
+        if c.scan_layers:
+            x, new_kv = jax.lax.scan(body, x, (params["blocks"], layer_kv))
+        else:
+            news = []
+            for i in range(c.num_layers):
+                inp = jax.tree.map(lambda t: t[i], (params["blocks"], layer_kv))
+                x, new = body(x, inp)
+                news.append(new)
+            new_kv = jax.tree.map(lambda *ts: jnp.stack(ts), *news)
+
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.unembed(params["embed"], x, DTYPES_LOGITS[c.logits_dtype])
+        return self._mask_pad_logits(logits[:, 0]), {
+            "kv": {**new_kv, "pos": pos_map}
+        }
+
     # --------------------------------------------------------- analytics
     def param_count(self) -> int:
         shapes = jax.eval_shape(

@@ -385,6 +385,43 @@ class AdaptiveController:
             bws.append(float(bw[j]))
         return ClusterSpec(tuple(groups)).with_bandwidths(bws)
 
+    def coverage_latency(self, cluster: ClusterSpec | None = None) -> float:
+        """Mean-field round latency of the DEPLOYED plan's loads (rounds).
+
+        The serving front-end's admission-control signal: the scheduler
+        scales each request's projected completion by
+        ``coverage_latency() / reference`` so the fleet sheds load when
+        the tracker's estimates say rounds are running slow. Evaluated
+        on the tracker-estimated cluster by default (``cluster``
+        overrides, e.g. for a no-drift baseline); returns ``inf`` when
+        the deployed loads cannot cover ``k`` on the estimates.
+        """
+        exe = self.executor
+        plan = exe.plan
+        est = cluster if cluster is not None else self.estimated_cluster()
+        alloc = plan.allocation
+        if alloc is not None:
+            loads = np.asarray(alloc.loads, float)
+        else:
+            loads_w = np.asarray(plan.loads_per_worker, float)
+            gid = np.asarray(plan.group_of_worker)
+            loads = np.asarray(
+                [loads_w[gid == j][0] if np.any(gid == j) else 0.0
+                 for j in range(plan.cluster.num_groups)]
+            )
+        if est.num_groups != len(loads):
+            # membership drifted since the plan deployed (replan pending):
+            # the plan's loads no longer map onto the estimated groups, so
+            # evaluate on the plan's own cluster (conservative hold-over)
+            est = plan.cluster
+        sch = exe.scheme
+        return coverage_latency(
+            est, loads, plan.k,
+            model=sch.latency_model,
+            upload=float(getattr(sch, "upload", 0.0)),
+            download=float(getattr(sch, "download", 0.0)),
+        )
+
     # ---------------------------------------------------------- decision
     def update(self) -> Decision:
         """Run one decision now (the cadence calls this automatically)."""

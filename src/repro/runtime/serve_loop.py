@@ -34,6 +34,7 @@ trainer consumes, so the per-worker block counts follow the configured
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -216,6 +217,41 @@ class CodedLMHead:
         return np.asarray(self.finish_mask_jit(key, self.deadline))
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    """Result of one ``Server.serve`` run over a request trace.
+
+    Latencies and the clock are in ROUNDS (the serve loop's virtual
+    clock: one slot-decode step = one round, one batched admit/prefill
+    pass = one round) so scheduling outcomes are deterministic and
+    CI-stable; ``wall_s`` is the measured wall time of the whole run for
+    tokens/s comparisons.
+    """
+
+    finished: tuple  # FinishedRequest records, completion order
+    tokens: int  # useful tokens emitted (done requests only)
+    rounds: float  # final virtual-clock value
+    decode_rounds: int
+    prefill_rounds: int
+    admitted: int
+    shed: int
+    wall_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else float("inf")
+
+    def latencies(self) -> np.ndarray:
+        """Arrival-to-last-token latencies (rounds) of DONE requests."""
+        return np.asarray(
+            [f.latency for f in self.finished if f.outcome == "done"], float
+        )
+
+    def latency_percentile(self, q: float) -> float:
+        lat = self.latencies()
+        return float(np.percentile(lat, q)) if lat.size else float("nan")
+
+
 class Server:
     """Batched decode with an optional coded LM head.
 
@@ -223,6 +259,13 @@ class Server:
     decode scan, coded erasure decode per token — into one XLA program;
     ``self.traces`` counts (re)traces so tests can assert that repeat
     calls with the same shapes never re-enter Python between tokens.
+
+    ``serve`` is the continuous-batching mode (DESIGN.md §10): a
+    slot-resident decode state driven by a ``SlotScheduler``, where
+    request admits/evicts are pure buffer updates into ONE fused
+    fixed-shape compiled program — a ``lax.cond``-gated prefill splice
+    followed by a decode chunk (``serve_traces`` counts its (re)traces,
+    one per distinct chunk size — slot swaps must not add any).
     """
 
     def __init__(self, model: Model, params, cluster: ClusterSpec | None = None,
@@ -242,11 +285,19 @@ class Server:
         )
         self._decode = jax.jit(model.decode_step)
         self.traces = 0
+        self.serve_traces = 0
         #: optional ground-truth (mus_w, alphas_w, shift_w) the next
         #: generate call samples straggling from (scenario closed loop)
         self._true_params = None
         self._generate_fn = jax.jit(
             self._gen_program, static_argnames=("max_new",)
+        )
+        # cache/logits/pos are donated: the serve loop threads them
+        # through every dispatch and never reuses the old buffers, so XLA
+        # can update the KV cache in place instead of copying it per call
+        self._serve_step_fn = jax.jit(
+            self._serve_step_program, static_argnames=("steps",),
+            donate_argnums=(1, 2, 3),
         )
 
     # --------------------------------------------------------- adaptivity
@@ -281,6 +332,13 @@ class Server:
         self._true_params = None  # stale shapes after a replan
         self._generate_fn = jax.jit(
             self._gen_program, static_argnames=("max_new",)
+        )
+        # cache/logits/pos are donated: the serve loop threads them
+        # through every dispatch and never reuses the old buffers, so XLA
+        # can update the KV cache in place instead of copying it per call
+        self._serve_step_fn = jax.jit(
+            self._serve_step_program, static_argnames=("steps",),
+            donate_argnums=(1, 2, 3),
         )
 
     # ------------------------------------------------------- jit pipeline
@@ -361,6 +419,243 @@ class Server:
             body, (cache, tok0), jnp.arange(max_new - 1, dtype=jnp.int32)
         )
         return jnp.concatenate([prompts, tok0[:, None], toks.T], axis=1)
+
+    # ------------------------------------------- continuous batching mode
+    def _serve_step_program(self, params, cache, logits, pos, prompts,
+                            lengths, row_of_slot, active, key, deadline,
+                            true_params=None, *, steps):
+        """One fused serve iteration: optional admit splice + decode chunk.
+
+        **Admit splice** (``lax.cond``-gated — the batched prefill costs
+        nothing on rounds without admissions): ``prompts`` is the
+        (S, prompt_cap) right-padded admission batch (row r = r-th
+        request placed this round), ``row_of_slot`` maps slot -> admission
+        row with −1 for slots keeping their current stream. Every splice
+        target is a TRACED argument, so admitting into any slot pattern
+        reuses the same compiled program. No token is sampled at admit —
+        the prefill logits become the slot's pending-logits state and the
+        chunk below samples from them, so every emitted token goes
+        through the coded head at the same amortized place and a
+        request's ``work`` is exactly 1 prefill round + ``out_len``
+        decode rounds.
+
+        **Decode chunk**: ``steps`` slot-decode rounds as one scan; each
+        round samples every slot's next token from its pending logits
+        (one coded round across the batch) and advances the model one
+        step. ``active``: (S,) bool — frozen slots (done or empty)
+        rewrite their current KV entry in place (idempotent) and keep
+        logits/pos, so the program's shape never depends on which slots
+        are live.
+        """
+        self.serve_traces += 1  # python side effect: runs only while tracing
+        row_of_slot = jnp.asarray(row_of_slot, jnp.int32)
+        fresh = row_of_slot >= 0  # (S,)
+
+        def splice(ops):
+            cache, logits, pos = ops
+            plog, ks, vs = self.model.prefill(params, prompts, lengths)
+            kv = cache["kv"]
+            s_slots, cache_len = kv["pos"].shape
+            prompt_cap = prompts.shape[1]
+            row = jnp.clip(row_of_slot, 0, None)
+            # prefilled K/V land in cache positions [0, prompt_cap) of
+            # their slot; the padded tail stays masked via pos = -1
+            k_new = jnp.zeros_like(kv["k"]).at[:, :, :prompt_cap].set(
+                ks[:, row]
+            )
+            v_new = jnp.zeros_like(kv["v"]).at[:, :, :prompt_cap].set(
+                vs[:, row]
+            )
+            fkv = fresh[None, :, None, None, None]
+            plen = jnp.asarray(lengths, jnp.int32)[row]  # (S,)
+            seq = jnp.arange(prompt_cap, dtype=jnp.int32)
+            pos_rows = jnp.where(
+                seq[None, :] < plen[:, None], seq[None, :], -1
+            )
+            pos_new = jnp.full((s_slots, cache_len), -1, jnp.int32)
+            pos_new = pos_new.at[:, :prompt_cap].set(pos_rows)
+            new_cache = {
+                "kv": {
+                    "k": jnp.where(fkv, k_new, kv["k"]),
+                    "v": jnp.where(fkv, v_new, kv["v"]),
+                    "pos": jnp.where(fresh[:, None], pos_new, kv["pos"]),
+                }
+            }
+            new_logits = jnp.where(
+                fresh[:, None], plog[row].astype(jnp.float32), logits
+            )
+            new_pos = jnp.where(fresh, plen, pos)
+            return new_cache, new_logits, new_pos
+
+        cache, logits, pos = jax.lax.cond(
+            jnp.any(fresh), splice, lambda ops: ops,
+            (cache, jnp.asarray(logits, jnp.float32),
+             jnp.asarray(pos, jnp.int32)),
+        )
+
+        def body(carry, t):
+            cache, logits, pos = carry
+            sel = logits
+            if self.coded_head is not None:
+                sel = self._coded_select(
+                    logits, jax.random.fold_in(key, t), deadline, true_params
+                )
+            tok = jnp.argmax(sel, -1).astype(jnp.int32)
+            nlog, cache = self.model.decode_step_slots(
+                params, cache, tok, pos
+            )
+            logits = jnp.where(
+                active[:, None], nlog.astype(jnp.float32), logits
+            )
+            pos = jnp.where(active, pos + 1, pos)
+            return (cache, logits, pos), tok
+
+        (cache, logits, pos), toks = jax.lax.scan(
+            body, (cache, logits, pos), jnp.arange(steps, dtype=jnp.int32)
+        )
+        return cache, logits, pos, toks
+
+    def serve(self, trace, *, slots: int = 4, prompt_cap: int | None = None,
+              max_out: int | None = None, decode_block: int = 4,
+              queue_cap: int = 64, admission_threshold: float = 1.0,
+              controller=None, round_latency=None, telemetry=None,
+              key=None) -> ServeReport:
+        """Continuous batching: serve a request trace through S slots.
+
+        ``trace``: iterable of ``serve.workload.Request`` (arrivals in
+        rounds). The scheduler (host) decides placements; the device side
+        is ONE fused fixed-shape compiled program per chunk size — a
+        ``lax.cond``-gated admit/prefill splice followed by the
+        slot-decode chunk — whose arguments carry all per-round
+        variation, so admits and evicts never retrace and an admission
+        costs no extra dispatch. The program returns nothing the
+        scheduler needs, so chunks dispatch asynchronously; the one
+        ``block_until_ready`` sits at the end of the run.
+
+        Admission control is wired to ``controller.coverage_latency``
+        when an ``AdaptiveController`` is given (or any ``round_latency``
+        callable, in round units): the reference latency is sampled once
+        at start, and requests are shed when the backlog×slowdown
+        projection blows their deadline class's budget
+        (``serve.scheduler.SlotScheduler``).
+        """
+        from repro.serve.scheduler import SlotScheduler
+
+        trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        if not trace:
+            raise ValueError("serve needs a non-empty request trace")
+        prompt_cap = int(
+            prompt_cap if prompt_cap is not None
+            else max(r.prompt_len for r in trace)
+        )
+        too_long = [r.rid for r in trace if r.prompt_len > prompt_cap]
+        if too_long:
+            raise ValueError(
+                f"requests {too_long} exceed prompt_cap={prompt_cap}"
+            )
+        max_out = int(
+            max_out if max_out is not None else max(r.out_len for r in trace)
+        )
+        # +1: a finished (frozen) slot idempotently rewrites the entry at
+        # its final pos, which sits one past its last sampled token
+        cache_len = prompt_cap + max_out + 1
+        if round_latency is None and controller is not None:
+            round_latency = controller.coverage_latency
+        reference = 1.0
+        if round_latency is not None:
+            reference = float(round_latency())
+            if not np.isfinite(reference) or reference <= 0:
+                reference = 1.0
+        sched = SlotScheduler(
+            slots, queue_cap=queue_cap,
+            admission_threshold=admission_threshold,
+            round_latency=round_latency, reference_latency=reference,
+            telemetry=telemetry,
+        )
+        key = key if key is not None else jax.random.PRNGKey(0)
+        deadline = jnp.float32(
+            self.coded_head.deadline if self.coded_head is not None else 0.0
+        )
+        true_params = None
+        if self.coded_head is not None:
+            true_params = (
+                self._true_params
+                if self._true_params is not None
+                else self.coded_head.executor.worker_params
+            )
+        cache = self.model.init_slot_cache(slots, cache_len)
+        logits = jnp.zeros((slots, padded_vocab(self.model.config.vocab_size)),
+                           jnp.float32)
+        pos = jnp.zeros((slots,), jnp.int32)
+
+        now, i, call = 0.0, 0, 0
+        prefill_rounds = decode_rounds = 0
+        # constant "no admissions this round" arguments (hoisted so the
+        # common no-admit dispatch ships no fresh host arrays)
+        no_prompts = jnp.zeros((slots, prompt_cap), jnp.int32)
+        no_lengths = jnp.zeros((slots,), jnp.int32)
+        no_rows = jnp.full((slots,), -1, jnp.int32)
+        t0 = time.perf_counter()
+        while i < len(trace) or not sched.idle:
+            while i < len(trace) and trace[i].arrival <= now + 1e-9:
+                sched.offer(trace[i], now)
+                i += 1
+            placed = sched.fill_slots(now)
+            if placed:
+                prompts_np = np.zeros((slots, prompt_cap), np.int32)
+                lengths_np = np.zeros((slots,), np.int32)
+                rows_np = np.full((slots,), -1, np.int32)
+                for r, (si, req) in enumerate(placed):
+                    prompts_np[r, : req.prompt_len] = req.prompt
+                    lengths_np[r] = req.prompt_len
+                    rows_np[si] = r
+                prompts = jnp.asarray(prompts_np)
+                lengths = jnp.asarray(lengths_np)
+                rows = jnp.asarray(rows_np)
+            else:
+                prompts, lengths, rows = no_prompts, no_lengths, no_rows
+            active = [s.busy and not s.done for s in sched.slots]
+            if any(active):
+                # chunk exactly to the next finish event: slots free the
+                # round their stream completes, with zero overshoot (at
+                # most ``decode_block`` step-count variants ever compile)
+                steps = min(
+                    decode_block,
+                    min(s.request.out_len - s.generated
+                        for s in sched.slots if s.busy and not s.done),
+                )
+                cache, logits, pos, _ = self._serve_step_fn(
+                    self.params, cache, logits, pos, prompts, lengths,
+                    rows, jnp.asarray(active),
+                    jax.random.fold_in(key, call), deadline, true_params,
+                    steps=steps,
+                )
+                call += 1
+                if placed:  # the fused admit pass costs its own round
+                    now += 1.0
+                    prefill_rounds += 1
+                now += float(steps)
+                decode_rounds += steps
+                sched.advance(steps)
+                sched.retire_done(now)
+            elif i < len(trace):
+                now = max(now, trace[i].arrival)  # idle: jump to next arrival
+            else:
+                break
+        jax.block_until_ready(logits)
+        wall = time.perf_counter() - t0
+        return ServeReport(
+            finished=tuple(sched.finished),
+            tokens=sum(
+                f.tokens for f in sched.finished if f.outcome == "done"
+            ),
+            rounds=now,
+            decode_rounds=decode_rounds,
+            prefill_rounds=prefill_rounds,
+            admitted=sched.admitted,
+            shed=sched.shed,
+            wall_s=wall,
+        )
 
     # ------------------------------------------------------------ public
     def generate(self, prompts, max_new: int | None = None, *, key=None,

@@ -1,0 +1,22 @@
+"""Continuous-batching serving front-end (DESIGN.md §10).
+
+Request streams -> admission queue -> padded stream slots -> the one
+compiled decode scan. ``workload`` generates seeded request traces,
+``scheduler`` owns slot assignment and admission control; the device
+side (batched prefill splice, slot-resident decode) lives in
+``runtime/serve_loop.py`` / ``models/model.py``.
+"""
+from repro.serve.workload import (  # noqa: F401
+    CLASS_PRIORITY,
+    DEADLINE_SLACK,
+    Request,
+    WorkloadSpec,
+    make_workload,
+    register_workload,
+    workload_names,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    FinishedRequest,
+    SlotScheduler,
+    SlotState,
+)

@@ -1,0 +1,229 @@
+"""Slot-based in-flight batching scheduler with admission control.
+
+``SlotScheduler`` owns the HOST side of continuous batching: which
+request occupies which of the ``S`` padded stream slots, the FIFO
+admission queue, and the load-shedding rule. It never touches device
+buffers — the serve loop (``runtime/serve_loop.py``) asks it *what* to
+do each round (which requests to splice into which slots, which finished
+slots to retire) and performs the actual buffer updates inside the
+compiled programs. That split keeps every scheduling decision
+deterministic, replayable from the seeded trace alone, and testable
+without a model.
+
+Admission control (DESIGN.md §10): a request is shed at enqueue time
+when its projected completion — queue backlog drained at ``slots``
+requests at a time, scaled by the fleet's current mean-field round
+latency relative to a reference — exceeds its deadline class's slack
+budget. ``round_latency`` is wired to
+``AdaptiveController.coverage_latency`` by the server, so the fleet
+sheds load *before* deadlines collapse when the tracker sees rounds
+slowing down. ``batch``-class requests are never shed for deadline risk;
+a full queue rejects any class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.serve.workload import CLASS_PRIORITY, DEADLINE_SLACK, Request
+
+
+@dataclasses.dataclass
+class SlotState:
+    """One padded stream slot of the running decode scan."""
+
+    request: Request | None = None
+    admitted_at: float = 0.0  # round the request entered the slot
+    generated: int = 0  # tokens emitted so far (first token lands at admit)
+
+    @property
+    def busy(self) -> bool:
+        return self.request is not None
+
+    @property
+    def done(self) -> bool:
+        return self.busy and self.generated >= self.request.out_len
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedRequest:
+    """Terminal record of one request (done or shed)."""
+
+    request: Request
+    outcome: str  # "done" | "shed"
+    reason: str  # "finished" | "queue_full" | "deadline_risk"
+    queue_wait: float  # rounds between arrival and admission (0 if shed)
+    finish_round: float
+    tokens: int
+
+    @property
+    def latency(self) -> float:
+        """Arrival-to-last-token latency in rounds (shed => inf)."""
+        if self.outcome != "done":
+            return float("inf")
+        return self.finish_round - self.request.arrival
+
+
+class SlotScheduler:
+    """Admission queue + slot assignment for ``S`` in-flight streams.
+
+    Drive it with the serve loop's virtual clock: ``offer(req, now)``
+    when a request arrives, ``fill_slots(now)`` whenever slots may be
+    free, ``advance(emitted, now)`` after each decode round,
+    ``retire_done(now)`` to evict finished streams. All decisions are
+    pure functions of the call sequence — replaying the same trace
+    reproduces the same schedule exactly.
+    """
+
+    def __init__(
+        self,
+        slots: int,
+        *,
+        queue_cap: int = 64,
+        admission_threshold: float = 1.0,
+        round_latency: Callable[[], float] | None = None,
+        reference_latency: float = 1.0,
+        telemetry=None,
+    ):
+        if slots <= 0:
+            raise ValueError(f"slots must be > 0, got {slots}")
+        if queue_cap < 0:
+            raise ValueError(f"queue_cap must be >= 0, got {queue_cap}")
+        if not admission_threshold > 0:
+            raise ValueError(
+                f"admission_threshold must be > 0, got {admission_threshold}"
+            )
+        self.slots = [SlotState() for _ in range(slots)]
+        self.queue: list[tuple[Request, float]] = []  # (request, arrival)
+        self.queue_cap = queue_cap
+        self.admission_threshold = admission_threshold
+        self.round_latency = round_latency
+        self.reference_latency = float(reference_latency)
+        self.telemetry = telemetry
+        self.finished: list[FinishedRequest] = []
+        self.shed = 0
+        self.admitted = 0
+
+    # ------------------------------------------------------------- views
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    @property
+    def busy_slots(self) -> int:
+        return sum(s.busy for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(not s.busy for s in self.slots)
+
+    def _latency_factor(self) -> float:
+        """Current round latency relative to the reference (>= 0)."""
+        if self.round_latency is None:
+            return 1.0
+        t = float(self.round_latency())
+        if t != t or t == float("inf"):  # NaN/inf: fleet cannot cover k
+            return float("inf")
+        return max(t, 0.0) / self.reference_latency
+
+    # --------------------------------------------------------- admission
+    def offer(self, req: Request, now: float) -> bool:
+        """Enqueue a newly arrived request, or shed it. True = accepted."""
+        if len(self.queue) >= self.queue_cap:
+            self._shed(req, now, "queue_full")
+            return False
+        slack = DEADLINE_SLACK[req.deadline_class]
+        if slack != float("inf"):
+            # projected completion: the backlog ahead of this request
+            # drains ``slots`` streams at a time, then the request runs
+            # its own prefill + decode — all scaled by how slow the
+            # fleet's rounds currently are vs the reference.
+            backlog = sum(r.work for r, _ in self.queue) + sum(
+                s.request.work - s.generated
+                for s in self.slots if s.busy and s.request is not None
+            )
+            est = (backlog / self.num_slots + req.work) * self._latency_factor()
+            budget = slack * req.work / self.admission_threshold
+            if est > budget:
+                self._shed(req, now, "deadline_risk")
+                return False
+        self.queue.append((req, now))
+        return True
+
+    def _shed(self, req: Request, now: float, reason: str) -> None:
+        self.shed += 1
+        self.finished.append(
+            FinishedRequest(
+                request=req, outcome="shed", reason=reason,
+                queue_wait=0.0, finish_round=now, tokens=0,
+            )
+        )
+        if self.telemetry is not None:
+            self.telemetry.event(
+                "request_evicted",
+                request_id=req.rid, reason=reason,
+                deadline_class=req.deadline_class, round=float(now),
+                queue_depth=len(self.queue),
+            )
+
+    # ------------------------------------------------------ slot control
+    def fill_slots(self, now: float) -> list[tuple[int, Request]]:
+        """Admit queued requests into free slots; deadline class first.
+
+        Within a class the queue stays FIFO (stable sort on priority).
+        Returns the (slot index, request) assignments made this call —
+        the serve loop splices each one's prefilled cache into that slot.
+        """
+        free = [i for i, s in enumerate(self.slots) if not s.busy]
+        if not free or not self.queue:
+            return []
+        self.queue.sort(key=lambda e: CLASS_PRIORITY[e[0].deadline_class])
+        placed = []
+        for slot_idx in free:
+            if not self.queue:
+                break
+            req, arrived = self.queue.pop(0)
+            self.slots[slot_idx] = SlotState(
+                request=req, admitted_at=now, generated=0
+            )
+            self.admitted += 1
+            placed.append((slot_idx, req))
+            if self.telemetry is not None:
+                self.telemetry.event(
+                    "request_admitted",
+                    request_id=req.rid, slot=slot_idx,
+                    queue_wait=float(now - arrived),
+                    deadline_class=req.deadline_class, round=float(now),
+                )
+        return placed
+
+    def advance(self, emitted: int = 1, now: float | None = None) -> None:
+        """Account ``emitted`` new tokens on every busy, unfinished slot."""
+        for s in self.slots:
+            if s.busy and not s.done:
+                s.generated = min(
+                    s.generated + emitted, s.request.out_len
+                )
+
+    def retire_done(self, now: float) -> list[tuple[int, FinishedRequest]]:
+        """Evict finished streams; their slots become admissible again."""
+        out = []
+        for i, s in enumerate(self.slots):
+            if not s.done:
+                continue
+            req = s.request
+            fin = FinishedRequest(
+                request=req, outcome="done", reason="finished",
+                queue_wait=0.0, finish_round=now, tokens=s.generated,
+            )
+            self.finished.append(fin)
+            out.append((i, fin))
+            self.slots[i] = SlotState()
+            if self.telemetry is not None:
+                self.telemetry.event(
+                    "request_done",
+                    request_id=req.rid, slot=i, tokens=s.generated,
+                    latency=float(now - req.arrival),
+                    deadline_class=req.deadline_class, round=float(now),
+                )
+        return out

@@ -203,3 +203,33 @@ def test_deadline_finite_positive_for_all_schemes():
         assert np.isfinite(d) and d > 0, plan.scheme
         d_eng = CodedComputeEngine(c, K, scheme).deadline(num_trials=500)
         assert np.isfinite(d_eng) and d_eng > 0, plan.scheme
+
+
+# --------------------------------------------------- allocate memoization
+def test_allocate_is_memoized_per_scheme_cluster_k():
+    from repro.core.schemes import allocate_cache_clear, allocate_cache_info
+
+    allocate_cache_clear()
+    c = cluster3()
+    scheme = make_scheme("optimal")
+    p1 = scheme.allocate(c, K)
+    assert allocate_cache_info()["size"] == 1
+    p2 = scheme.allocate(c, K)  # hit: same key, no new entry
+    assert allocate_cache_info()["size"] == 1
+    np.testing.assert_array_equal(p1.loads, p2.loads)
+    assert p2.scheme_obj is scheme and p2.scheme == scheme.tag
+    # a caller mutating a returned plan must not poison the cache
+    p1.loads[:] = -1.0
+    np.testing.assert_array_equal(scheme.allocate(c, K).loads, p2.loads)
+    # membership change = different cluster key -> fresh solve, and an
+    # equal-parameter scheme OBJECT shares the cache entry (frozen eq)
+    c2 = ClusterSpec.make([6, 10], [4.0, 1.0], 1.0)
+    scheme.allocate(c2, K)
+    assert allocate_cache_info()["size"] == 2
+    make_scheme("optimal").allocate(c, K)
+    assert allocate_cache_info()["size"] == 2
+    # different k is a different solve
+    scheme.allocate(c, K // 2)
+    assert allocate_cache_info()["size"] == 3
+    allocate_cache_clear()
+    assert allocate_cache_info()["size"] == 0
