@@ -38,6 +38,7 @@ from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import make_scheme
 from repro.runtime.control import AdaptConfig, AdaptiveController, coverage_latency
 from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.plan_bucket import BucketConfig
 from repro.sim import make_scenario, scenario_names
 
 K = 2_000  # coded rows / partitions
@@ -83,8 +84,15 @@ def _policy_eval(true_cluster, loads, k, deadline, scheme):
 def run_scenario(name: str, *, base: ClusterSpec = BASE, k: int = K,
                  horizon: int | None = None, every: int = ADAPT_EVERY,
                  threshold: float = THRESHOLD,
-                 replan_cost: float = REPLAN_COST, seed: int = 0) -> dict:
-    """Replay one registered scenario under the three policies."""
+                 replan_cost: float = REPLAN_COST, seed: int = 0,
+                 bucket_quantum: int | None = None) -> dict:
+    """Replay one registered scenario under the three policies.
+
+    ``bucket_quantum`` runs the adaptive executor in bucket-switch mode
+    (DESIGN.md §11): a replan landing in an already-admitted bucket is
+    retrace-free, so ``replan_cost`` is charged only on true bucket
+    misses — this is what makes an ``every=1`` cadence affordable.
+    """
     spec = make_scenario(name, horizon=horizon)
     trace = spec.trace(base, seed=seed)
     scheme = make_scheme(spec.scheme)
@@ -95,8 +103,13 @@ def run_scenario(name: str, *, base: ClusterSpec = BASE, k: int = K,
     static_loads = np.asarray(exe_static.plan.allocation.loads, float)
     static_deadline = exe_static.deadline
 
-    exe_adapt = CodedRoundExecutor(base, k, spec.scheme,
-                                   deadline_safety=SAFETY)
+    exe_adapt = CodedRoundExecutor(
+        base, k, spec.scheme, deadline_safety=SAFETY,
+        bucket_config=(
+            BucketConfig(quantum=bucket_quantum)
+            if bucket_quantum is not None else None
+        ),
+    )
     ctl = AdaptiveController(
         exe_adapt,
         AdaptConfig(every=every, threshold=threshold,
@@ -107,6 +120,7 @@ def run_scenario(name: str, *, base: ClusterSpec = BASE, k: int = K,
     lat = {"static": [], "oracle": [], "adaptive": []}
     skips = {"static": 0, "adaptive": 0}
     replan_rounds = []
+    free_replans = 0  # bucket hits: plan changed, nothing recompiled
     for t in range(h):
         truth = trace.at(t)
         # static: the t=0 plan, scored against today's truth
@@ -136,7 +150,10 @@ def run_scenario(name: str, *, base: ClusterSpec = BASE, k: int = K,
         skips["adaptive"] += s
         d = ctl.observe_truth(jax.random.fold_in(key, t), truth)
         if d is not None and d.replanned:
-            c += replan_cost
+            if exe_adapt.last_bucket_hit:
+                free_replans += 1  # in-program bucket switch: no retrace
+            else:
+                c += replan_cost
             replan_rounds.append(t)
         lat["adaptive"].append(c)
 
@@ -165,6 +182,7 @@ def run_scenario(name: str, *, base: ClusterSpec = BASE, k: int = K,
         "effective_adaptive": eff["adaptive"],
         "effective_gain": eff["static"] / eff["adaptive"],
         "replans": len(replan_rounds),
+        "free_replans": free_replans,
         "replan_rounds": replan_rounds,
         "static_skips": skips["static"],
         "adaptive_skips": skips["adaptive"],

@@ -9,6 +9,7 @@ import argparse
 import time
 
 from benchmarks import (
+    alloc_fastpath,
     fig2,
     fig3,
     fig4,
@@ -40,7 +41,8 @@ def main():
         "fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
         "fig6": fig6, "fig7": fig7, "fig8": fig8, "fig9": fig9,
         "fig_comm": fig_comm, "fig_grad": fig_grad, "fig_adapt": fig_adapt,
-        "roofline": roofline, "serve_throughput": serve_throughput,
+        "alloc_fastpath": alloc_fastpath, "roofline": roofline,
+        "serve_throughput": serve_throughput,
         "serve_frontend": serve_frontend,
     }
     if args.list:

@@ -1,0 +1,144 @@
+"""Jitted allocation cores — the planner fast path (DESIGN.md §11).
+
+The eager path in ``core/allocation.py`` evaluates Theorem 2 as a chain
+of small eager jnp ops (plus two 200-iteration host bisections for the
+comm-aware deadline and the group-code split), costing ~0.4 s per
+``allocate`` call on CPU — enough to dominate oracle sweeps and to gate
+how often an adaptive controller can afford to replan. This module
+reimplements each solve as ONE jitted function over per-group ``(G,)``
+arrays: the Lambert-W evaluation, the load formulas, and the bisections
+(as fixed-trip ``lax.while_loop``s) all fuse into a single compiled
+program, so a warm replan is a dispatch plus a handful of scalar
+transfers (~sub-millisecond; ≥50x is asserted by
+``benchmarks/alloc_fastpath.py``).
+
+Division of labour: the cores return REAL-valued results only; the
+callers in ``allocation.py`` keep doing host-side integerization
+(``ceil(loads - 1e-9)``) and ``AllocationPlan`` assembly, identically
+on both paths, so the eager path stays a drop-in parity oracle
+(``tests/test_alloc_fastpath.py`` pins loads/t*/n_int agreement for
+every registered scheme).
+
+``k`` is passed as a traced scalar so plans for different row counts
+share one compiled program per ``(G,)`` shape/dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.lambertw import lambertwm1_neg_exp
+
+#: iteration cap for the device bisections; with the relative interval
+#: tolerance below they exit in ~50 trips, the cap only bounds tracing
+BISECT_MAX_ITERS = 200
+#: relative interval width at which a bisection stops tightening
+BISECT_RTOL = 1e-15
+
+
+def _w_term(mu, alpha):
+    """W_{-1}(-exp(-(alpha*mu + 1))) — the Theorem-2 Lambert-W term."""
+    return lambertwm1_neg_exp(alpha * mu + 1.0)
+
+
+def _bisect(cover, lo, hi, target):
+    """Root of increasing ``cover(t) = target`` on [lo, hi], on device.
+
+    Same midpoint updates as the eager host loops, as a fixed-trip
+    ``lax.while_loop``: trips are bounded by ``BISECT_MAX_ITERS`` and cut
+    short once the bracket is relatively tighter than ``BISECT_RTOL``
+    (f64 exhaustion — matching the eager path's early exit).
+    """
+
+    def keep_going(state):
+        i, lo, hi = state
+        tight = (hi - lo) <= BISECT_RTOL * jnp.maximum(jnp.abs(hi), 1.0)
+        return (i < BISECT_MAX_ITERS) & ~tight
+
+    def step(state):
+        i, lo, hi = state
+        mid = 0.5 * (lo + hi)
+        below = cover(mid) < target
+        return i + 1, jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    _, lo, hi = lax.while_loop(keep_going, step, (jnp.int32(0), lo, hi))
+    return 0.5 * (lo + hi)
+
+
+@jax.jit
+def optimal_core(n_w, mu, al, k):
+    """Theorem 2 in one fused program: (loads, r, n, t_base).
+
+    ``t_base`` is eq. (18)'s T*; the caller scales by ``k`` for the
+    per-row model (33) — the W-term never sees the load scaling.
+    """
+    w = _w_term(mu, al)
+    r = n_w * (1.0 + 1.0 / w)  # eq. (15)
+    xs = al + jnp.log(-w) / mu  # eq. (17)
+    s = jnp.sum(r / xs)
+    loads = k / (xs * s)  # eq. (16)
+    n = jnp.sum(n_w * loads)
+    t = 1.0 / jnp.sum(-mu * n_w / w)  # eq. (18)
+    return loads, r, n, t
+
+
+@jax.jit
+def reisizadeh_core(n_w, mu, al, k):
+    """Appendix D (the scheme of [32]): (loads, r, n)."""
+    w = _w_term(mu, al)
+    delta = -(w + 1.0) / mu
+    s = jnp.sum(n_w * mu / (1.0 + mu * delta))
+    loads = k / (s * delta)
+    n = jnp.sum(n_w * loads)
+    r = n_w * (1.0 + 1.0 / w)
+    return loads, r, n
+
+
+@jax.jit
+def comm_core(n_w, mu, a_eff, c, k):
+    """Comm-aware allocation (arXiv:2109.11246): (loads, r, n, t).
+
+    ``a_eff = alpha + download/b`` is the comm-shifted alpha of the
+    Lambert-W inner problem; ``c = upload/b`` the fixed transfer shift.
+    The outer deadline equation ``sum_j g_j (t - c_j)_+ = 1`` is
+    piecewise-linear increasing and bisected on
+    ``[min c, max c + 1/sum g]`` (``cover(hi) >= 1`` because every term
+    has slack at least ``1/sum g`` there). With all ``c = 0`` the root
+    sits exactly on the bracket endpoint, so the closed form
+    ``t = 1/sum g`` is selected instead — keeping parity with the eager
+    path's Lambert-W fast path bit-for-bit.
+    """
+    w = _w_term(mu, a_eff)
+    g = -mu * n_w / w
+    xs = -(1.0 + w) / mu
+    lo = jnp.min(c)
+    hi = jnp.max(c) + 1.0 / jnp.sum(g)
+    t = _bisect(
+        lambda t: jnp.sum(g * jnp.maximum(t - c, 0.0)), lo, hi, 1.0
+    )
+    t = jnp.where(jnp.all(c == 0.0), 1.0 / jnp.sum(g), t)
+    slack = jnp.maximum(t - c, 0.0)
+    loads = k * slack / xs
+    r = jnp.where(loads > 0, n_w * (1.0 + 1.0 / w), 0.0)
+    n = jnp.sum(n_w * loads)
+    return loads, r, n, t
+
+
+@jax.jit
+def group_split_core(n_w, mu, r):
+    """eq. (28)+(26): per-group split with sum_j N_j (1 - e^{-mu_j c}) = r.
+
+    The closed-form bracket replaces the eager path's doubling phase:
+    ``total(c) >= N (1 - e^{-mu_min c})``, so
+    ``hi = -log(1 - r/N)/mu_min`` always covers the root for r < N.
+    """
+    big_n = jnp.sum(n_w)
+    hi = -jnp.log1p(-(r / big_n)) / jnp.min(mu)
+    c = _bisect(
+        lambda c: jnp.sum(n_w * (1.0 - jnp.exp(-mu * c))),
+        jnp.zeros_like(hi),
+        hi,
+        r,
+    )
+    return n_w * (1.0 - jnp.exp(-mu * c))

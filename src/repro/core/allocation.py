@@ -27,12 +27,14 @@ and operate on per-group arrays ``(N, mu, alpha)``; ``ClusterSpec`` from
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import alloc_fastpath
 from repro.core.lambertw import lambertwm1_neg_exp
 from repro.core.runtime_model import (
     ClusterSpec,
@@ -41,6 +43,51 @@ from repro.core.runtime_model import (
     resolve_latency_model,
     xi,
 )
+
+# --------------------------------------------------------------- fast path
+#
+# Every solver below has two implementations: the original eager/numpy
+# path (the parity ORACLE — small eager jnp ops plus host bisections)
+# and a jitted core in ``core/alloc_fastpath.py`` that fuses the whole
+# solve into one compiled program (~sub-ms warm vs ~0.4 s eager). The
+# fast path is the default; ``eager_oracle()`` forces the oracle for
+# parity tests and A/B timing. Host-side integerization and plan
+# assembly are shared by both paths.
+
+_USE_FASTPATH = True
+
+#: residual tolerance of the eager bisections' early exit
+BISECT_TOL = 1e-12
+#: residual bound ASSERTED after every eager bisection (satellite of
+#: ISSUE 7; also pinned by tests/test_alloc_fastpath.py)
+BISECT_RESIDUAL_BOUND = 1e-9
+
+
+def fastpath_enabled() -> bool:
+    """Whether allocation solves route through the jitted cores."""
+    return _USE_FASTPATH
+
+
+def set_fastpath(enabled: bool) -> bool:
+    """Toggle the jitted fast path globally; returns the previous value."""
+    global _USE_FASTPATH
+    prev = _USE_FASTPATH
+    _USE_FASTPATH = bool(enabled)
+    return prev
+
+
+@contextlib.contextmanager
+def eager_oracle():
+    """Force the eager/numpy oracle path within the block."""
+    prev = set_fastpath(False)
+    try:
+        yield
+    finally:
+        set_fastpath(prev)
+
+
+def _fastpath(flag: bool | None) -> bool:
+    return _USE_FASTPATH if flag is None else bool(flag)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +175,7 @@ def optimal_allocation(
     *,
     per_row: bool | None = None,
     model: LatencyModel | None = None,
+    fastpath: bool | None = None,
 ) -> AllocationPlan:
     """Theorem 2 (or Corollary 2 under ``LatencyModel.MODEL_30``).
 
@@ -136,14 +184,19 @@ def optimal_allocation(
     """
     model = resolve_latency_model(model, per_row)
     n_w, mu, al = cluster.arrays()
-    r = optimal_r(n_w, mu, al)
-    xs = xi_star(mu, al)
-    # l*_j = k / (r_j + sum_{j'!=j} r_j' xi_j / xi_j')   (eq. (16))
-    # = k / (xi_j * sum_{j'} r_j' / xi_j')
-    s = jnp.sum(r / xs)
-    loads = k / (xs * s)
-    n = jnp.sum(n_w * loads)
-    t = t_star(n_w, mu, al, k, model=model)
+    if _fastpath(fastpath):
+        loads, r, n, t = alloc_fastpath.optimal_core(n_w, mu, al, float(k))
+        if model.per_row:
+            t = float(t) * k
+    else:
+        r = optimal_r(n_w, mu, al)
+        xs = xi_star(mu, al)
+        # l*_j = k / (r_j + sum_{j'!=j} r_j' xi_j / xi_j')   (eq. (16))
+        # = k / (xi_j * sum_{j'} r_j' / xi_j')
+        s = jnp.sum(r / xs)
+        loads = k / (xs * s)
+        n = jnp.sum(n_w * loads)
+        t = t_star(n_w, mu, al, k, model=model)
     loads_np = np.asarray(loads)
     loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
     return AllocationPlan(
@@ -186,7 +239,9 @@ def uniform_given_n(cluster: ClusterSpec, k: int, n: float) -> AllocationPlan:
     )
 
 
-def group_code_split(cluster: ClusterSpec, r: int) -> np.ndarray:
+def group_code_split(
+    cluster: ClusterSpec, r: int, *, fastpath: bool | None = None
+) -> np.ndarray:
     """Solve eq. (28)+(26) for the per-group split (r_1..r_G), sum = r.
 
     From eq. (28) the equalized tail gives r_j = N_j (1 - exp(-mu_j c))
@@ -196,24 +251,37 @@ def group_code_split(cluster: ClusterSpec, r: int) -> np.ndarray:
     may have no simultaneous integer solution for G > 2; the equalized-c
     form is the continuous relaxation that Corollary 1 optimizes.)
     """
+    assert 0 < r < cluster.total_workers, "need r in (0, N)"
     n_w, mu, _ = cluster.arrays()
+    if _fastpath(fastpath):
+        return np.asarray(
+            alloc_fastpath.group_split_core(n_w, mu, float(r))
+        )
     n_w = np.asarray(n_w)
     mu = np.asarray(mu)
-    assert 0 < r < cluster.total_workers, "need r in (0, N)"
 
     def total(c):
         return float(np.sum(n_w * (1.0 - np.exp(-mu * c))))
 
+    scale = max(1.0, float(r))
     lo, hi = 0.0, 1.0
     while total(hi) < r:
         hi *= 2.0
     for _ in range(200):
         mid = 0.5 * (lo + hi)
-        if total(mid) < r:
+        res = total(mid) - r
+        if abs(res) <= BISECT_TOL * scale:  # converged: stop early
+            lo = hi = mid
+            break
+        if res < 0:
             lo = mid
         else:
             hi = mid
     c = 0.5 * (lo + hi)
+    residual = abs(total(c) - r)
+    assert residual < BISECT_RESIDUAL_BOUND * scale, (
+        f"group split bisection residual {residual:.3e} (r={r})"
+    )
     return n_w * (1.0 - np.exp(-mu * c))
 
 
@@ -243,7 +311,9 @@ def uniform_given_r(cluster: ClusterSpec, k: int, r: int) -> AllocationPlan:
     )
 
 
-def reisizadeh_allocation(cluster: ClusterSpec, k: int) -> AllocationPlan:
+def reisizadeh_allocation(
+    cluster: ClusterSpec, k: int, *, fastpath: bool | None = None
+) -> AllocationPlan:
     """Appendix D — the heterogeneous allocation of [32].
 
     l~_j = k / (s * delta_j) with
@@ -252,15 +322,19 @@ def reisizadeh_allocation(cluster: ClusterSpec, k: int) -> AllocationPlan:
     model (30); the paper shows it coincides with Corollary 2's optimum.
     """
     n_w, mu, al = cluster.arrays()
-    w = _w_term(mu, al)
-    delta = -(w + 1.0) / mu
-    s = jnp.sum(n_w * mu / (1.0 + mu * delta))
-    loads = k / (s * delta)
-    n = jnp.sum(n_w * loads)
+    if _fastpath(fastpath):
+        loads, r, n = alloc_fastpath.reisizadeh_core(n_w, mu, al, float(k))
+        r = np.asarray(r)
+    else:
+        w = _w_term(mu, al)
+        delta = -(w + 1.0) / mu
+        s = jnp.sum(n_w * mu / (1.0 + mu * delta))
+        loads = k / (s * delta)
+        n = jnp.sum(n_w * loads)
+        # Expected completion counts at the equalized deadline = r*_j.
+        r = np.asarray(optimal_r(n_w, mu, al))
     loads_np = np.asarray(loads)
     loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
-    # Expected completion counts at the equalized deadline = r*_j.
-    r = np.asarray(optimal_r(n_w, mu, al))
     return AllocationPlan(
         loads=loads_np,
         loads_int=loads_int,
@@ -292,7 +366,13 @@ def comm_deadline_terms(cluster: ClusterSpec, upload: float, download: float):
     return c, g, xs
 
 
-def comm_t_star(cluster: ClusterSpec, upload: float, download: float) -> float:
+def comm_t_star(
+    cluster: ClusterSpec,
+    upload: float,
+    download: float,
+    *,
+    fastpath: bool | None = None,
+) -> float:
     """Comm-augmented minimum expected latency (numeric; bound of fig_comm).
 
     Solves ``sum_j g_j (t - c_j)_+ = 1`` for t. The left side is a
@@ -302,6 +382,14 @@ def comm_t_star(cluster: ClusterSpec, upload: float, download: float) -> float:
     the closed form ``t = 1/sum_j g_j`` (= eq. (18) at the comm-shifted
     alphas) is returned directly — the Lambert-W fast path.
     """
+    if _fastpath(fastpath):
+        n_w, mu, al = cluster.arrays()
+        c, dal = comm_terms(cluster, upload, download)
+        # t does not depend on k; any k gives the same deadline root
+        _, _, _, t = alloc_fastpath.comm_core(
+            n_w, mu, al + jnp.asarray(dal), jnp.asarray(c), 1.0
+        )
+        return float(t)
     c, g, _ = comm_deadline_terms(cluster, upload, download)
     if np.all(c == 0.0):
         return float(1.0 / np.sum(g))
@@ -313,11 +401,20 @@ def comm_t_star(cluster: ClusterSpec, upload: float, download: float) -> float:
     hi = float(np.max(c) + 1.0 / np.sum(g))
     for _ in range(200):
         mid = 0.5 * (lo + hi)
-        if covered(mid) < 1.0:
+        res = covered(mid) - 1.0
+        if abs(res) <= BISECT_TOL:  # converged: stop early
+            lo = hi = mid
+            break
+        if res < 0:
             lo = mid
         else:
             hi = mid
-    return 0.5 * (lo + hi)
+    t = 0.5 * (lo + hi)
+    residual = abs(covered(t) - 1.0)
+    assert residual < BISECT_RESIDUAL_BOUND, (
+        f"comm deadline bisection residual {residual:.3e}"
+    )
+    return t
 
 
 def comm_aware_allocation(
@@ -326,6 +423,7 @@ def comm_aware_allocation(
     *,
     upload: float = 1.0,
     download: float = 1.0,
+    fastpath: bool | None = None,
 ) -> AllocationPlan:
     """Communication-delay-aware optimal allocation (arXiv:2109.11246).
 
@@ -358,18 +456,26 @@ def comm_aware_allocation(
     c, dal = comm_terms(cluster, upload, download)
     if np.all(c == 0.0) and np.all(dal == 0.0):
         # transfer terms vanish entirely -> exact Theorem 2 plan
-        plan = optimal_allocation(cluster, k)
+        plan = optimal_allocation(cluster, k, fastpath=fastpath)
         return dataclasses.replace(
             plan, scheme="comm_aware", scheme_obj=scheme_obj
         )
-    _, g, xs = comm_deadline_terms(cluster, upload, download)
     n_w, mu, al = cluster.arrays()
-    t = comm_t_star(cluster, upload, download)
-    slack = np.maximum(t - c, 0.0)
-    loads_np = np.asarray(k * slack / xs)
-    active = loads_np > 0
-    r_star = np.asarray(optimal_r(n_w, mu, np.asarray(al) + dal))
-    r = np.where(active, r_star, 0.0)
+    if _fastpath(fastpath):
+        loads, r, _n, t = alloc_fastpath.comm_core(
+            n_w, mu, al + jnp.asarray(dal), jnp.asarray(c), float(k)
+        )
+        loads_np = np.asarray(loads)
+        r = np.asarray(r)
+        t = float(t)
+    else:
+        _, g, xs = comm_deadline_terms(cluster, upload, download)
+        t = comm_t_star(cluster, upload, download, fastpath=False)
+        slack = np.maximum(t - c, 0.0)
+        loads_np = np.asarray(k * slack / xs)
+        active = loads_np > 0
+        r_star = np.asarray(optimal_r(n_w, mu, np.asarray(al) + dal))
+        r = np.where(active, r_star, 0.0)
     loads_int = np.ceil(loads_np - 1e-9).astype(np.int64)
     n = float(np.sum(np.asarray(n_w) * loads_np))
     return AllocationPlan(

@@ -69,12 +69,16 @@ def lambertwm1_neg_exp(c):
     and the direct branch returns NaN. In log space the defining equation
     w e^w = -e^{-c} becomes u = c + log(u) with w = -u, a fast-converging
     fixed point for large c.
+
+    The whole function is a handful of fused element-wise ops with a
+    static-trip ``fori_loop`` (reverse-differentiable: static bounds
+    lower to scan), so it jits into the single-program allocation cores
+    of ``core/alloc_fastpath.py`` with no host round-trips.
     """
     c = jnp.asarray(c, dtype=jnp.result_type(c, jnp.float64))
     direct = lambertwm1(-jnp.exp(-jnp.minimum(c, 30.0)))
-    u = c + jnp.log(jnp.maximum(c, 1.1))
-    for _ in range(5):
-        u = c + jnp.log(u)
+    u0 = c + jnp.log(jnp.maximum(c, 1.1))
+    u = jax.lax.fori_loop(0, 5, lambda _, u: c + jnp.log(u), u0)
     return jnp.where(c < 30.0, direct, -u)
 
 

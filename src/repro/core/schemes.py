@@ -47,15 +47,25 @@ from repro.core.runtime_model import (
 #: so equality covers every parameter that feeds the solve.
 _ALLOC_CACHE: dict = {}
 _ALLOC_CACHE_CAP = 512
+_ALLOC_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
 def allocate_cache_clear() -> None:
     """Drop all memoized allocations (tests / manual invalidation)."""
     _ALLOC_CACHE.clear()
+    _ALLOC_CACHE_STATS["hits"] = 0
+    _ALLOC_CACHE_STATS["misses"] = 0
 
 
 def allocate_cache_info() -> dict:
-    return {"size": len(_ALLOC_CACHE), "cap": _ALLOC_CACHE_CAP}
+    """Memo-cache stats; hit/miss counters feed the ``alloc_cache_hit``
+    telemetry event the adaptive controller emits (DESIGN.md §8/§11)."""
+    return {
+        "size": len(_ALLOC_CACHE),
+        "cap": _ALLOC_CACHE_CAP,
+        "hits": _ALLOC_CACHE_STATS["hits"],
+        "misses": _ALLOC_CACHE_STATS["misses"],
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,13 +107,18 @@ class AllocationScheme:
         hit or miss, so plan identity semantics (``plan.scheme_obj is
         scheme``) are preserved.
         """
-        cache_key = (self, cluster, int(k))
+        # the solver path is part of the key so eager_oracle() blocks
+        # can never be served a fastpath-computed plan (or vice versa)
+        cache_key = (self, cluster, int(k), allocation.fastpath_enabled())
         plan = _ALLOC_CACHE.get(cache_key)
         if plan is None:
+            _ALLOC_CACHE_STATS["misses"] += 1
             plan = self._allocate(cluster, k)
             if len(_ALLOC_CACHE) >= _ALLOC_CACHE_CAP:
                 _ALLOC_CACHE.pop(next(iter(_ALLOC_CACHE)))
             _ALLOC_CACHE[cache_key] = plan
+        else:
+            _ALLOC_CACHE_STATS["hits"] += 1
         # fresh array views per call: a caller mutating plan.loads must
         # not corrupt the cached solve
         return dataclasses.replace(

@@ -20,6 +20,7 @@ from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import make_scheme, scheme_names
 from repro.data.pipeline import make_extras
 from repro.models.model import Model
+from repro.runtime.compile_cache import enable_persistent_cache
 from repro.runtime.serve_loop import ServeConfig, Server
 from repro.serve import make_workload, workload_names
 from repro.sim import make_scenario, scenario_names
@@ -68,6 +69,11 @@ def main():
     ap.add_argument("--adapt-threshold", type=float, default=None,
                     help="hysteresis: replan only when the estimated "
                          "latency improves by this fraction (default 0.05)")
+    ap.add_argument("--bucket-quantum", type=int, default=None,
+                    help="quantize the coded head's integer loads to this "
+                         "multiple and replan via an in-program bucket "
+                         "switch: replans within the admitted capacity "
+                         "retrace nothing (DESIGN.md §11)")
     ap.add_argument("--rounds", type=int, default=None,
                     help="serve rounds to run under --scenario (default: "
                          "min(scenario horizon, 24))")
@@ -103,6 +109,10 @@ def main():
         raise SystemExit("--adapt-every requires --scenario (closed-loop "
                          "serving is driven by a scenario trace)")
 
+    # cold-start compile reuse: every program this process builds
+    # (bucket branches included) persists to the on-disk JAX cache
+    enable_persistent_cache()
+
     config = get_arch(args.arch)
     if args.reduced:
         config = config.reduced()
@@ -120,7 +130,8 @@ def main():
         model, params, cluster,
         ServeConfig(max_decode_steps=args.max_new, scheme=scheme,
                     use_kernel=args.use_kernel,
-                    jit_pipeline=not args.legacy_decode),
+                    jit_pipeline=not args.legacy_decode,
+                    bucket_quantum=args.bucket_quantum),
     )
     if server.coded_head is not None:
         h = server.coded_head

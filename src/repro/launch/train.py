@@ -24,6 +24,7 @@ from repro.sim import scenario_names
 from repro.data import SyntheticLMData
 from repro.models.model import Model
 from repro.optim import AdamWConfig
+from repro.runtime.compile_cache import enable_persistent_cache
 from repro.runtime.train_loop import (
     TrainConfig,
     Trainer,
@@ -69,6 +70,11 @@ def main(argv=None):
     ap.add_argument("--adapt-threshold", type=float, default=None,
                     help="hysteresis: replan only when the estimated "
                          "latency improves by this fraction (default 0.05)")
+    ap.add_argument("--bucket-quantum", type=int, default=None,
+                    help="quantize integer partition loads to this multiple "
+                         "and replan via an in-program bucket switch: "
+                         "adaptive replans within the admitted capacity "
+                         "skip the step recompile (DESIGN.md §11)")
     args = ap.parse_args(argv)
     if args.hetero_groups is None:
         # coded flags must not silently no-op without a fleet to plan for
@@ -78,7 +84,8 @@ def main(argv=None):
                                  ("--deadline-safety", args.deadline_safety),
                                  ("--scenario", args.scenario),
                                  ("--adapt-every", args.adapt_every),
-                                 ("--adapt-threshold", args.adapt_threshold))
+                                 ("--adapt-threshold", args.adapt_threshold),
+                                 ("--bucket-quantum", args.bucket_quantum))
             if v is not None
         ]
         if coded_flags:
@@ -86,6 +93,10 @@ def main(argv=None):
                 f"{', '.join(coded_flags)} require --hetero-groups "
                 f"(coded training needs a fleet to plan against)"
             )
+
+    # cold-start compile reuse: every program this process builds
+    # (bucket branches included) persists to the on-disk JAX cache
+    enable_persistent_cache()
 
     config = get_arch(args.arch)
     if args.reduced:
@@ -119,6 +130,7 @@ def main(argv=None):
         adapt_threshold=(
             0.05 if args.adapt_threshold is None else args.adapt_threshold
         ),
+        bucket_quantum=args.bucket_quantum,
     )
     if args.checkpoint_dir and not args.resume:
         # fresh run: ignore stale checkpoints by training from step 0 only

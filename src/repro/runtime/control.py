@@ -40,7 +40,7 @@ from repro.core.runtime_model import (
     LatencyModel,
     comm_terms,
 )
-from repro.core.schemes import AllocationScheme
+from repro.core.schemes import AllocationScheme, allocate_cache_info
 
 
 def coverage_latency(
@@ -257,10 +257,15 @@ class AdaptiveController:
             tracker = StragglerTracker(executor.cluster, forget=self.cfg.forget)
         self.tracker = tracker
         self.telemetry = telemetry
+        # the executor emits plan_bucket_hit/miss events on replans; give
+        # it this controller's stream unless the caller wired its own
+        if telemetry is not None and getattr(executor, "telemetry", None) is None:
+            executor.telemetry = telemetry
         self.on_replan = on_replan
         self.round = 0  # monotonic executed-round counter
         self.decisions: list[Decision] = []
         self._membership: tuple[int, ...] | None = None
+        self._alloc_hits_seen = allocate_cache_info()["hits"]
 
     # ------------------------------------------------------------- views
     @property
@@ -424,14 +429,23 @@ class AdaptiveController:
 
     # ---------------------------------------------------------- decision
     def update(self) -> Decision:
-        """Run one decision now (the cadence calls this automatically)."""
+        """Run one decision now (the cadence calls this automatically).
+
+        With a bucket-switch executor the replan-cost model sharpens:
+        ``bucket_probe`` asks whether the candidate plan would land in an
+        already-admitted bucket (a FREE replan — zero retraces), and only
+        a true bucket miss is charged ``cfg.replan_cost``. Without
+        bucketing every replan recompiles, so every replan is charged.
+        """
         est = self.estimated_cluster()
+        probe = getattr(self.executor, "bucket_probe", lambda _c: None)(est)
+        cost = 0.0 if probe else self.cfg.replan_cost
         d = replan_decision(
             self.executor.scheme,
             self.executor.plan,
             est,
             threshold=self.cfg.threshold,
-            replan_cost=self.cfg.replan_cost,
+            replan_cost=cost,
             horizon=self.cfg.horizon,
             round=self.round,
         )
@@ -456,4 +470,16 @@ class AdaptiveController:
                 deadline=float(self.executor.deadline),
                 workers=int(self.executor.num_workers),
             )
+            info = allocate_cache_info()
+            new_hits = info["hits"] - self._alloc_hits_seen
+            if new_hits > 0:
+                self._alloc_hits_seen = info["hits"]
+                self.telemetry.event(
+                    "alloc_cache_hit",
+                    round=d.round,
+                    new_hits=new_hits,
+                    hits=info["hits"],
+                    misses=info["misses"],
+                    size=info["size"],
+                )
         return d

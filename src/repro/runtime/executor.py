@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import CodedComputeEngine
+from repro.core.engine import CodedComputeEngine, plan_deadline
 from repro.core.planner import DeploymentPlan
 from repro.core.runtime_model import (
     ClusterSpec,
@@ -41,6 +41,14 @@ from repro.core.runtime_model import (
     sample_worker_times,
 )
 from repro.core.schemes import AllocationScheme
+from repro.runtime.plan_bucket import (
+    BucketConfig,
+    PlanBucketSet,
+    bucket_signature,
+    quantize_loads_int,
+    quantize_plan,
+    select_bucket,
+)
 
 
 class CodedRoundExecutor:
@@ -52,6 +60,16 @@ class CodedRoundExecutor:
     methods are traceable and safe to close over in a compiled program;
     after a ``replan`` the consumer must rebuild anything traced against
     the old shapes (worker count and slot count may change).
+
+    **Bucket-switch mode** (``bucket_config`` set, DESIGN.md §11):
+    integer loads are quantized to bucket shapes, admitted buckets are
+    held as stacked runtime-argument state (``bucket_args``), and the
+    ``*_bucket_jit`` methods select the active branch in-program via
+    ``lax.switch`` on a runtime bucket index — so a replan that stays
+    within the admitted worker count and slot capacity NEVER retraces a
+    consumer program (``last_replan_structural`` tells consumers whether
+    a rebuild is required; ``plan_bucket_hit``/``plan_bucket_miss``
+    telemetry events surface the cache behaviour).
     """
 
     def __init__(
@@ -62,17 +80,37 @@ class CodedRoundExecutor:
         *,
         scheme_params: dict | None = None,
         deadline_safety: float = 3.0,
+        bucket_config: BucketConfig | None = None,
+        telemetry=None,
     ):
         self.engine = CodedComputeEngine(
             cluster, k, scheme, scheme_params=scheme_params
         )
         self.deadline_safety = float(deadline_safety)
+        self.bucket_config = bucket_config
+        self.telemetry = telemetry
+        #: admitted bucket branches (None = bucketing off)
+        self.buckets: PlanBucketSet | None = None
+        #: row of ``buckets`` the current plan lives in
+        self.active_bucket = 0
+        #: did the last (re)plan change shapes (consumer must rebuild)?
+        self.last_replan_structural = True
+        #: did the last replan land in an already-admitted bucket?
+        self.last_bucket_hit = False
         self._refresh()
 
     # ----------------------------------------------------------- plan state
     def _refresh(self) -> None:
-        """Recompute deadline + device arrays from the engine's plan."""
+        """Structural (re)build from the engine's plan."""
         plan = self.engine.plan
+        if self.bucket_config is not None:
+            plan = quantize_plan(plan, self.bucket_config.quantum)
+        self._bind_plan(plan)
+        if self.bucket_config is not None:
+            self._init_buckets()
+
+    def _bind_plan(self, plan: DeploymentPlan) -> None:
+        """Recompute deadline + device arrays for the active plan."""
         self.plan: DeploymentPlan = plan
         self.deadline = self._integer_load_deadline(self.deadline_safety)
         owner = np.zeros((plan.n,), np.int32)
@@ -82,6 +120,31 @@ class CodedRoundExecutor:
         self.slot_owner = jnp.asarray(owner)
         self._loads_w = jnp.asarray(plan.loads_per_worker, jnp.float32)
         self._mus_w, self._alphas_w, self._shift_w = self.worker_param_arrays()
+
+    def _init_buckets(self) -> None:
+        cfg = self.bucket_config
+        plan = self.plan
+        n_cap = int(np.ceil(plan.n * cfg.n_headroom))
+        self.buckets = PlanBucketSet(plan.num_workers, n_cap, cfg.capacity)
+        sig = bucket_signature(
+            plan.cluster, plan.allocation.loads_int, self.k
+        )
+        self.active_bucket, _ = self.buckets.admit(
+            sig, plan, self.deadline, *self.worker_params
+        )
+
+    def _emit_bucket_event(self, *, hit: bool, structural: bool) -> None:
+        if self.telemetry is None:
+            return
+        self.telemetry.event(
+            "plan_bucket_hit" if hit else "plan_bucket_miss",
+            structural=structural,
+            bucket=self.active_bucket,
+            buckets=len(self.buckets) if self.buckets is not None else 0,
+            n=self.plan.n,
+            n_cap=self.buckets.n_cap if self.buckets is not None else 0,
+            workers=self.plan.num_workers,
+        )
 
     def worker_param_arrays(self, cluster: ClusterSpec | None = None):
         """(mus_w, alphas_w, shift_w) for the plan's workers under ``cluster``.
@@ -194,14 +257,19 @@ class CodedRoundExecutor:
             inflation = float("inf")
         if inflation <= self.INTEGERIZATION_SLACK:
             # PR-2 serving policy unchanged: analytic T* when the scheme
-            # has one, the scheme's own MC estimate otherwise
-            return self.engine.deadline(safety, key=key,
-                                        num_trials=num_trials)
+            # has one, the scheme's own MC estimate otherwise. Computed
+            # from the EXECUTOR's plan (not the engine's) so bucket
+            # quantization flows into the MC fallback.
+            return plan_deadline(self.plan, safety, key=key,
+                                 num_trials=num_trials)
         if key is None:
             key = jax.random.PRNGKey(0)
         t = float(
-            self.engine.expected_latency(
-                key, num_trials, use_integer_loads=True
+            jnp.mean(
+                self.engine.scheme.simulate(
+                    key, plan.cluster, alloc, num_trials,
+                    use_integer_loads=True,
+                )
             )
         )
         analytic = float(plan.t_star)
@@ -274,17 +342,120 @@ class CodedRoundExecutor:
             self.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
         )
 
+    # ------------------------------------------------------- bucket switch
+    def bucket_args(self):
+        """(stacked bucket state, active index) for a compiled program.
+
+        Fetch FRESH on every dispatch and pass both as runtime arguments
+        (never close over them): replans rewrite array values and the
+        index, and runtime arguments are the only way those updates
+        reach an already-compiled program without a retrace.
+        """
+        if self.buckets is None:
+            raise RuntimeError("bucket_args requires bucket_config")
+        return self.buckets.device_state(), jnp.int32(self.active_bucket)
+
+    def round_times_bucket_jit(self, key, state, index, *, mus=None,
+                               alphas=None, shifts=None):
+        """((W,) round times, selected bucket) — bucket-switch sampler.
+
+        Like ``round_times_jit`` but loads/params/deadline come from the
+        bucket branch selected in-program (``lax.switch`` on ``index``),
+        so the SAME trace serves every admitted plan. The selected
+        branch dict is returned for deadline/slot-mask reuse. Overrides
+        inject ground truth exactly as in ``round_times_jit``.
+        """
+        sel = select_bucket(state, index)
+        t = sample_worker_times(
+            key,
+            sel["loads"],
+            sel["mus"] if mus is None else mus,
+            sel["alphas"] if alphas is None else alphas,
+            self.k,
+            1,
+            model=self.engine.scheme.latency_model,
+            shift_per_worker=sel["shifts"] if shifts is None else shifts,
+        )[0]
+        return t, sel
+
+    def finish_mask_bucket_jit(self, key, state, index, *, mus=None,
+                               alphas=None, shifts=None):
+        """((W,) finish mask, selected bucket) at the bucket's deadline."""
+        t, sel = self.round_times_bucket_jit(
+            key, state, index, mus=mus, alphas=alphas, shifts=shifts
+        )
+        return t <= sel["deadline"], sel
+
+    def slot_mask_bucket_jit(self, worker_mask, sel):
+        """(n_cap,) slot-erasure mask from a (W,) worker mask.
+
+        Capacity padding rows are masked dead via the bucket's alive
+        mask, so decoders treat them exactly like erasures.
+        """
+        return jnp.asarray(worker_mask, bool)[sel["owner"]] & sel["alive"]
+
+    def bucket_probe(self, candidate_cluster: ClusterSpec) -> bool | None:
+        """Would replanning onto ``candidate_cluster`` be retrace-free?
+
+        True iff the candidate plan's quantized signature is already
+        admitted (no structural rebuild, no new branch compile) — the
+        controller charges ``replan_cost`` only when this is False.
+        Cheap: ``allocate`` is memoized and the fast path is jitted.
+        None when bucketing is off.
+        """
+        if self.buckets is None:
+            return None
+        if candidate_cluster.total_workers != self.buckets.num_workers:
+            return False
+        alloc = self.engine.scheme.allocate(candidate_cluster, self.k)
+        q = quantize_loads_int(alloc.loads_int, self.bucket_config.quantum)
+        n_w = np.asarray(
+            [g.num_workers for g in candidate_cluster.groups], np.int64
+        )
+        if int(np.sum(n_w * q)) > self.buckets.n_cap:
+            return False
+        return bucket_signature(candidate_cluster, q, self.k) in self.buckets
+
     # ----------------------------------------------------------- elasticity
     def replan(self, new_cluster: ClusterSpec) -> DeploymentPlan:
         """Re-plan on a membership/estimate change; scheme params preserved.
 
-        Rebuilds the deadline, scatter map and sampling arrays. Consumers
-        holding compiled programs traced against the old worker/slot
-        shapes must rebuild them (both loops do).
+        Rebuilds the deadline, scatter map and sampling arrays. Without
+        bucketing, consumers holding compiled programs traced against
+        the old worker/slot shapes must rebuild them (both loops do).
+        With bucketing, a replan that keeps the worker count and fits
+        the slot capacity only updates bucket state + the active index
+        (``last_replan_structural`` False): compiled bucket-switch
+        programs keep running with zero retraces.
         """
-        plan = self.engine.replan(new_cluster)
-        self._refresh()
-        return plan
+        self.engine.replan(new_cluster)
+        if self.bucket_config is None:
+            self._refresh()
+            self.last_replan_structural = True
+            return self.plan
+        qplan = quantize_plan(self.engine.plan, self.bucket_config.quantum)
+        structural = (
+            self.buckets is None
+            or qplan.num_workers != self.buckets.num_workers
+            or qplan.n > self.buckets.n_cap
+        )
+        if structural:
+            self._refresh()
+            self.last_replan_structural = True
+            self.last_bucket_hit = False
+            self._emit_bucket_event(hit=False, structural=True)
+            return self.plan
+        self._bind_plan(qplan)
+        sig = bucket_signature(
+            qplan.cluster, qplan.allocation.loads_int, self.k
+        )
+        self.active_bucket, hit = self.buckets.admit(
+            sig, qplan, self.deadline, *self.worker_params
+        )
+        self.last_replan_structural = False
+        self.last_bucket_hit = hit
+        self._emit_bucket_event(hit=hit, structural=False)
+        return self.plan
 
     def on_estimates_update(self, tracker) -> DeploymentPlan:
         """Replan from a ``StragglerTracker``'s current estimated cluster."""

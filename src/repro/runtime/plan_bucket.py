@@ -1,0 +1,232 @@
+"""Shape-bucketed deployment plans (DESIGN.md §11).
+
+A replan changes the integerized per-group loads, which changes the
+slot count ``n`` and every ``(n,)``/``(W,)`` array a compiled consumer
+program was traced against — so, pre-bucketing, every accepted replan
+recompiled the fused serve/train program, and ``AdaptiveController``
+had to amortize that through ``replan_cost``. Bucketing removes the
+recompile for most replans:
+
+* **Quantization** — per-group integer loads are rounded UP to
+  multiples of a small ``quantum``. Rounding up preserves coverage
+  (workers compute at least as many coded rows as the real-valued
+  optimum asks) at a bounded redundancy overshoot, and collapses nearby
+  plans onto a small set of *bucket signatures*. Two plans in the same
+  bucket have IDENTICAL deployed shapes and worker->slot scatter maps.
+* **Stacked branch state** — ``PlanBucketSet`` holds up to ``capacity``
+  admitted buckets as stacked host arrays padded to a fixed slot
+  capacity ``n_cap``; ``device_state()`` exposes them as one pytree of
+  ``(B, ...)`` arrays that consumers pass as RUNTIME ARGUMENTS to their
+  compiled programs (never closed over — closures bake at trace time),
+  and ``select_bucket`` picks the active branch *inside* the program
+  with ``lax.switch`` on a runtime bucket index. An intra-bucket (or
+  cross-bucket, within capacity) replan therefore changes only array
+  VALUES, never shapes: zero retraces, zero host round-trips.
+
+``CodedRoundExecutor`` owns admission/eviction and the structural
+escape hatch (worker count changed, or ``n`` outgrew ``n_cap`` — the
+only cases that still rebuild and retrace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.planner import DeploymentPlan, integerize
+from repro.core.runtime_model import ClusterSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """Quantization / capacity knobs for plan bucketing.
+
+    quantum: per-group integer loads round UP to multiples of this.
+    capacity: max simultaneously-compiled bucket branches (LRU evict).
+    n_headroom: slot capacity ``n_cap = ceil(n0 * n_headroom)`` over the
+      initial plan's quantized slot count; replans needing more slots
+      trigger a structural rebuild.
+    """
+
+    quantum: int = 4
+    capacity: int = 8
+    n_headroom: float = 1.5
+
+    def __post_init__(self):
+        if self.quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {self.quantum}")
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.n_headroom < 1.0:
+            raise ValueError(
+                f"n_headroom must be >= 1.0, got {self.n_headroom}"
+            )
+
+
+def quantize_loads_int(loads_int, quantum: int) -> np.ndarray:
+    """Round per-group integer loads UP to multiples of ``quantum``.
+
+    Zero loads stay zero (a comm-excluded group must not be handed
+    rows by quantization).
+    """
+    loads_int = np.asarray(loads_int, dtype=np.int64)
+    q = int(quantum)
+    return -(-loads_int // q) * q
+
+
+def quantize_plan(plan: DeploymentPlan, quantum: int) -> DeploymentPlan:
+    """Re-integerize a deployment plan onto quantized per-group loads.
+
+    The underlying real-valued allocation rides along unchanged (the
+    controller's coverage metric keeps using the true loads); only the
+    deployed integer loads / row ranges / slot count are quantized.
+    """
+    alloc = plan.allocation
+    if alloc is None:
+        raise ValueError("plan bucketing needs the real-valued allocation")
+    q_loads = quantize_loads_int(alloc.loads_int, quantum)
+    n_w = np.asarray(
+        [g.num_workers for g in plan.cluster.groups], dtype=np.int64
+    )
+    q_alloc = dataclasses.replace(
+        alloc,
+        loads_int=q_loads,
+        n_int=int(np.sum(n_w * q_loads)),
+    )
+    return integerize(plan.cluster, q_alloc)
+
+
+def bucket_signature(cluster: ClusterSpec, loads_int_q, k: int) -> tuple:
+    """Hashable identity of a quantized deployment shape.
+
+    Two plans with equal signatures deploy IDENTICAL shapes and
+    worker->slot maps: same k, same per-group worker counts (order
+    matters — the scatter map is positional), same quantized loads.
+    """
+    return (
+        int(k),
+        tuple(int(g.num_workers) for g in cluster.groups),
+        tuple(int(v) for v in np.asarray(loads_int_q)),
+    )
+
+
+def select_bucket(state: dict, index):
+    """Pick one bucket's branch state inside a compiled program.
+
+    ``state`` is the ``(B, ...)``-stacked pytree from ``device_state``;
+    ``index`` a traced int32. Selection is a ``lax.switch`` over the
+    bucket slots (the in-program replanning of ISSUE 7: the branch is
+    chosen at RUN time, so a host-side replan only has to update the
+    index and array values it already passes as arguments).
+    """
+    b = int(next(iter(state.values())).shape[0])
+    if b == 1:
+        return {k: v[0] for k, v in state.items()}
+    branches = [
+        (lambda s: (lambda st: jax.tree.map(lambda a: a[s], st)))(slot)
+        for slot in range(b)
+    ]
+    return lax.switch(index, branches, state)
+
+
+class PlanBucketSet:
+    """LRU set of admitted plan buckets as stacked, padded host arrays.
+
+    Rows: per-bucket runtime state a round consumer needs — per-worker
+    loads and shifted-exp parameters ``(W,)``, slot owner map and
+    alive mask padded to ``(n_cap,)``, and the scalar deadline. Padding
+    slots point at worker 0 but are never alive, so decode paths mask
+    them out exactly like erasures (for the MDS generator, the first
+    ``n`` rows of an ``(n_cap, k)`` systematic code are a valid
+    ``(n, k)`` code — capacity rows simply never arrive).
+    """
+
+    def __init__(self, num_workers: int, n_cap: int, capacity: int):
+        self.num_workers = int(num_workers)
+        self.n_cap = int(n_cap)
+        self.capacity = int(capacity)
+        #: signature -> row slot, in LRU order (oldest first)
+        self._slots: OrderedDict[tuple, int] = OrderedDict()
+        b, w, n = self.capacity, self.num_workers, self.n_cap
+        self._owner = np.zeros((b, n), np.int32)
+        self._alive = np.zeros((b, n), bool)
+        self._loads = np.zeros((b, w), np.float32)
+        self._deadline = np.full((b,), np.inf, np.float32)
+        self._mus = np.ones((b, w), np.float64)
+        self._alphas = np.ones((b, w), np.float64)
+        self._shifts = np.full((b, w), np.inf, np.float32)
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, sig: tuple) -> bool:
+        return sig in self._slots
+
+    def slot_of(self, sig: tuple) -> int:
+        return self._slots[sig]
+
+    @property
+    def signatures(self) -> tuple:
+        return tuple(self._slots)
+
+    def _write_params(self, slot: int, deadline, mus, alphas, shifts):
+        self._deadline[slot] = float(deadline)
+        self._mus[slot] = np.asarray(mus, np.float64)
+        self._alphas[slot] = np.asarray(alphas, np.float64)
+        self._shifts[slot] = np.asarray(shifts, np.float32)
+
+    def admit(
+        self, sig: tuple, plan: DeploymentPlan, deadline, mus, alphas, shifts
+    ) -> tuple[int, bool]:
+        """Admit (or refresh) a bucket; returns ``(slot, hit)``.
+
+        On a hit the shape rows (owner/alive/loads) are already correct
+        by signature identity; only the runtime parameters (deadline and
+        the possibly-drifted worker params) are rewritten. On a miss the
+        LRU bucket is evicted when at capacity.
+        """
+        if plan.num_workers != self.num_workers or plan.n > self.n_cap:
+            raise ValueError("structural change cannot be admitted")
+        hit = sig in self._slots
+        if hit:
+            slot = self._slots[sig]
+            self._slots.move_to_end(sig)
+        else:
+            if len(self._slots) >= self.capacity:
+                _, slot = self._slots.popitem(last=False)  # LRU evict
+            else:
+                slot = len(self._slots)
+            self._slots[sig] = slot
+            owner = np.zeros((self.n_cap,), np.int32)
+            alive = np.zeros((self.n_cap,), bool)
+            for w_i, (s, e) in enumerate(plan.row_ranges):
+                owner[s:e] = w_i
+            alive[: plan.n] = True
+            self._owner[slot] = owner
+            self._alive[slot] = alive
+            self._loads[slot] = np.asarray(
+                plan.loads_per_worker, np.float32
+            )
+        self._write_params(slot, deadline, mus, alphas, shifts)
+        return slot, hit
+
+    def device_state(self) -> dict:
+        """The stacked branch state as a pytree of device arrays.
+
+        Passed to compiled programs as runtime arguments every dispatch;
+        cheap (a few hundred KB at serving scale) and REQUIRED for
+        correctness — closing over it would bake values at trace time.
+        """
+        return {
+            "owner": jnp.asarray(self._owner),
+            "alive": jnp.asarray(self._alive),
+            "loads": jnp.asarray(self._loads),
+            "deadline": jnp.asarray(self._deadline),
+            "mus": jnp.asarray(self._mus),
+            "alphas": jnp.asarray(self._alphas),
+            "shifts": jnp.asarray(self._shifts),
+        }

@@ -40,12 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coding import decode_systematic_jit
+from repro.core.coding import decode_systematic_jit, make_generator
 from repro.core.planner import DeploymentPlan
 from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import AllocationScheme
 from repro.models.model import DTYPES_LOGITS, Model, padded_vocab
 from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.plan_bucket import BucketConfig
 
 NEG_INF = -1e30  # pad-vocab sentinel (matches Model._mask_pad_logits)
 
@@ -58,6 +59,21 @@ class ServeConfig:
     scheme: str | AllocationScheme = "optimal"  # registry name or object
     use_kernel: bool = False  # Pallas coded-matvec kernel for the block mix
     jit_pipeline: bool = True  # False: legacy per-token host loop (numpy)
+    # plan bucketing (DESIGN.md §11): set ``bucket_quantum`` to quantize
+    # integer loads onto bucket shapes and replan in-program via a
+    # runtime bucket switch — intra-capacity replans then retrace nothing
+    bucket_quantum: int | None = None
+    bucket_capacity: int = 8
+    bucket_headroom: float = 1.5
+
+    def bucket_config(self) -> BucketConfig | None:
+        if self.bucket_quantum is None:
+            return None
+        return BucketConfig(
+            quantum=self.bucket_quantum,
+            capacity=self.bucket_capacity,
+            n_headroom=self.bucket_headroom,
+        )
 
 
 class CodedLMHead:
@@ -74,13 +90,15 @@ class CodedLMHead:
 
     def __init__(self, embed_table, cluster: ClusterSpec, *, block_rows: int = 256,
                  key=None, scheme: str | AllocationScheme = "optimal",
-                 deadline_safety: float = 3.0):
+                 deadline_safety: float = 3.0,
+                 bucket_config: BucketConfig | None = None, telemetry=None):
         self.table = np.asarray(embed_table, np.float32)  # (Vp, D)
         vp, _ = self.table.shape
         self.block_rows = block_rows
         self.kb = -(-vp // block_rows)  # blocks needed to cover the vocab
         self.executor = CodedRoundExecutor(
-            cluster, self.kb, scheme, deadline_safety=deadline_safety
+            cluster, self.kb, scheme, deadline_safety=deadline_safety,
+            bucket_config=bucket_config, telemetry=telemetry,
         )
         self.engine = self.executor.engine
         self._generator_key = key
@@ -97,9 +115,17 @@ class CodedLMHead:
         ``refresh_coded_head``).
         """
         self.plan: DeploymentPlan = self.executor.plan
-        self.nb = self.plan.n
+        buckets = self.executor.buckets
+        # Bucket mode codes at slot CAPACITY: the first n rows of the
+        # systematic (n_cap, kb) code form a valid (n, kb) code and the
+        # capacity padding rows are never alive, so ONE generator + coded
+        # tensor serves every admitted bucket (rebuilt only on structural
+        # replans, never on a bucket switch).
+        self.nb = buckets.n_cap if buckets is not None else self.plan.n
         self.generator = np.asarray(
-            self.executor.generator(key=self._generator_key)
+            make_generator(self.nb, self.kb, key=self._generator_key)
+            if buckets is not None
+            else self.executor.generator(key=self._generator_key)
         )
         self.generator_j = jnp.asarray(self.generator)
         # coded blocks: (nb, R, D) = einsum over the block-reshaped table
@@ -117,10 +143,26 @@ class CodedLMHead:
         # in one device op (no per-worker Python loop at decode time).
         self.block_owner = self.executor.slot_owner
 
+    def rebind_soft(self) -> None:
+        """Rebind after a NON-structural bucket-switch replan.
+
+        Shapes, generator and coded blocks are unchanged — compiled
+        consumer programs stay valid, and the new branch state reaches
+        them through ``executor.bucket_args()`` at the next dispatch.
+        Only the cheap host-side plan views are refreshed here.
+        """
+        self.plan = self.executor.plan
+        self.deadline = self.executor.deadline
+        self._rows_of_worker = self.plan.row_ranges
+        self.block_owner = self.executor.slot_owner
+
     def replan(self, new_cluster: ClusterSpec) -> DeploymentPlan:
         """Elastic replan + rebind (scheme params preserved by the engine)."""
         plan = self.executor.replan(new_cluster)
-        self.refresh()
+        if self.executor.last_replan_structural:
+            self.refresh()
+        else:
+            self.rebind_soft()
         return plan
 
     # ------------------------------------------------------ jit pipeline
@@ -169,6 +211,21 @@ class CodedLMHead:
         nb, b, r = products.shape
         z, ok = decode_systematic_jit(
             self.generator_j, products.reshape(nb, b * r), alive
+        )
+        logits = z.reshape(self.kb, b, r).transpose(1, 0, 2).reshape(b, -1)
+        return logits, ok
+
+    def decode_logits_bucket_jit(self, products, alive_blocks):
+        """``decode_logits_jit`` with a precomputed (nb,) block-alive mask.
+
+        Bucket-switch path: the erasure mask comes from the selected
+        bucket's owner/alive arrays (``slot_mask_bucket_jit`` — capacity
+        padding rows always dead) instead of the static scatter map.
+        """
+        nb, b, r = products.shape
+        z, ok = decode_systematic_jit(
+            self.generator_j, products.reshape(nb, b * r),
+            jnp.asarray(alive_blocks, bool),
         )
         logits = z.reshape(self.kb, b, r).transpose(1, 0, 2).reshape(b, -1)
         return logits, ok
@@ -279,6 +336,7 @@ class Server:
                 block_rows=self.cfg.block_rows,
                 scheme=self.cfg.scheme,
                 deadline_safety=self.cfg.deadline_safety,
+                bucket_config=self.cfg.bucket_config(),
             )
             if cluster is not None
             else None
@@ -325,9 +383,18 @@ class Server:
         constants of the compiled generation program, so the jit cache
         must be dropped (the retrace IS the serve-side replan cost the
         controller's cost model charges for).
+
+        Bucket-switch mode: after a NON-structural replan the compiled
+        programs are still valid — the new branch state reaches them as
+        runtime arguments — so only the cheap host views rebind and the
+        jit caches survive (the whole point of DESIGN.md §11).
         """
         if self.coded_head is None:
             raise ValueError("refresh_coded_head requires a coded head")
+        if not self.coded_head.executor.last_replan_structural:
+            self.coded_head.rebind_soft()
+            self._true_params = None  # possibly stale after any replan
+            return
         self.coded_head.refresh()
         self._true_params = None  # stale shapes after a replan
         self._generate_fn = jax.jit(
@@ -341,8 +408,16 @@ class Server:
             donate_argnums=(1, 2, 3),
         )
 
+    def _bucket_args(self):
+        """Fresh (bucket state, index) runtime args — None when off."""
+        head = self.coded_head
+        if head is None or head.executor.buckets is None:
+            return None
+        return head.executor.bucket_args()
+
     # ------------------------------------------------------- jit pipeline
-    def _coded_select(self, logits, step_key, deadline, true_params=None):
+    def _coded_select(self, logits, step_key, deadline, true_params=None,
+                      bucket_args=None):
         """One coded round on a (B, V) logits batch, fully traceable.
 
         Pad-vocab sentinels (-1e30) are zeroed before the block mix (they
@@ -351,7 +426,12 @@ class Server:
         ``jnp.where`` on the decode-ok flag — no shape-dependent Python
         branch inside the compiled program. ``true_params`` optionally
         overrides the straggler-sampling parameters (ground-truth
-        injection — see ``set_true_cluster``).
+        injection — see ``set_true_cluster``). ``bucket_args`` — the
+        ``(stacked state, index)`` pair from ``executor.bucket_args()`` —
+        switches the round onto the bucket-select path: loads, deadline
+        and the slot-erasure mask all come from the branch picked
+        in-program, so a replan within bucket capacity never retraces
+        this program (DESIGN.md §11).
         """
         head = self.coded_head
         vocab = self.model.config.vocab_size
@@ -362,16 +442,24 @@ class Server:
         mus, alphas, shifts = (
             true_params if true_params is not None else (None, None, None)
         )
-        mask = head.finish_mask_jit(
-            step_key, deadline, mus=mus, alphas=alphas, shifts=shifts
-        )
-        dec, ok = head.decode_logits_jit(products, mask)
+        if bucket_args is not None:
+            state, index = bucket_args
+            mask, sel = head.executor.finish_mask_bucket_jit(
+                step_key, state, index, mus=mus, alphas=alphas, shifts=shifts
+            )
+            alive = head.executor.slot_mask_bucket_jit(mask, sel)
+            dec, ok = head.decode_logits_bucket_jit(products, alive)
+        else:
+            mask = head.finish_mask_jit(
+                step_key, deadline, mus=mus, alphas=alphas, shifts=shifts
+            )
+            dec, ok = head.decode_logits_jit(products, mask)
         dec = dec[:, : logits.shape[-1]]
         dec = jnp.where(ids[None, :] < vocab, dec, NEG_INF)
         return jnp.where(ok, dec, lf)
 
     def _gen_program(self, params, cache, prompts, key, deadline,
-                     true_params=None, *, max_new):
+                     true_params=None, bucket_args=None, *, max_new):
         """The whole generation as one traceable program (two lax.scans)."""
         self.traces += 1  # python side effect: runs only while tracing
         b, s0 = prompts.shape
@@ -400,7 +488,8 @@ class Server:
             if self.coded_head is None:
                 return logits
             return self._coded_select(
-                logits, jax.random.fold_in(key, step), deadline, true_params
+                logits, jax.random.fold_in(key, step), deadline, true_params,
+                bucket_args,
             )
 
         # every sampled token goes through the coded head, including the
@@ -423,7 +512,7 @@ class Server:
     # ------------------------------------------- continuous batching mode
     def _serve_step_program(self, params, cache, logits, pos, prompts,
                             lengths, row_of_slot, active, key, deadline,
-                            true_params=None, *, steps):
+                            true_params=None, bucket_args=None, *, steps):
         """One fused serve iteration: optional admit splice + decode chunk.
 
         **Admit splice** (``lax.cond``-gated — the batched prefill costs
@@ -498,7 +587,8 @@ class Server:
             sel = logits
             if self.coded_head is not None:
                 sel = self._coded_select(
-                    logits, jax.random.fold_in(key, t), deadline, true_params
+                    logits, jax.random.fold_in(key, t), deadline, true_params,
+                    bucket_args,
                 )
             tok = jnp.argmax(sel, -1).astype(jnp.int32)
             nlog, cache = self.model.decode_step_slots(
@@ -583,6 +673,7 @@ class Server:
                 if self._true_params is not None
                 else self.coded_head.executor.worker_params
             )
+        bucket_args = self._bucket_args()
         cache = self.model.init_slot_cache(slots, cache_len)
         logits = jnp.zeros((slots, padded_vocab(self.model.config.vocab_size)),
                            jnp.float32)
@@ -628,7 +719,7 @@ class Server:
                     self.params, cache, logits, pos, prompts, lengths,
                     rows, jnp.asarray(active),
                     jax.random.fold_in(key, call), deadline, true_params,
-                    steps=steps,
+                    bucket_args, steps=steps,
                 )
                 call += 1
                 if placed:  # the fused admit pass costs its own round
@@ -685,7 +776,7 @@ class Server:
             )
         return self._generate_fn(
             self.params, cache, jnp.asarray(prompts, jnp.int32), key,
-            deadline, true_params, max_new=max_new,
+            deadline, true_params, self._bucket_args(), max_new=max_new,
         )
 
     # ------------------------------------------------- legacy host loop

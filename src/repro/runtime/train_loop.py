@@ -43,6 +43,7 @@ from repro.core.schemes import AllocationScheme
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.plan_bucket import BucketConfig
 from repro.runtime.telemetry import Telemetry
 
 PyTree = Any
@@ -132,6 +133,21 @@ class TrainConfig:
     adapt_threshold: float = 0.05
     #: modeled cost of one replan (recompile), in round-latency units
     adapt_replan_cost: float = 0.0
+    # ---- plan bucketing (DESIGN.md §11) ----
+    #: quantize integer loads to this multiple and replan via an
+    #: in-program bucket switch; None = off (every replan recompiles)
+    bucket_quantum: int | None = None
+    bucket_capacity: int = 8
+    bucket_headroom: float = 1.5
+
+    def bucket_config(self) -> BucketConfig | None:
+        if self.bucket_quantum is None:
+            return None
+        return BucketConfig(
+            quantum=self.bucket_quantum,
+            capacity=self.bucket_capacity,
+            n_headroom=self.bucket_headroom,
+        )
 
 
 def make_train_step_fn(model: Model, opt_cfg: AdamWConfig):
@@ -186,11 +202,18 @@ def make_coded_train_step_fn(
     the straggler mask samples from THEM instead of the plan's closure
     constants — the scenario layer's ground truth, injectable every
     round without retracing (DESIGN.md §7).
+
+    ``bucket_args`` (the pair from ``executor.bucket_args()``) switches
+    straggler sampling and the slot-erasure mask onto the bucket branch
+    selected in-program (DESIGN.md §11); ``b_matrix`` must then be sized
+    to the bucket slot capacity (capacity rows are never alive). The
+    ``deadline`` argument is ignored on that path — it comes from the
+    selected branch.
     """
     b_mat = jnp.asarray(b_matrix, jnp.float32)
 
     def coded_step(params, opt_state, batch, key, deadline,
-                   true_params=None):
+                   true_params=None, bucket_args=None):
         if batch.get("extras") is not None:
             raise NotImplementedError(
                 "coded training does not partition family extras yet"
@@ -208,14 +231,23 @@ def make_coded_train_step_fn(
 
         grads_k, metrics_k = jax.vmap(part_grad)(tp, lp)
 
-        if true_params is None:
+        mus_w, alphas_w, shift_w = (
+            true_params if true_params is not None else (None, None, None)
+        )
+        if bucket_args is not None:
+            state, index = bucket_args
+            wmask, sel = executor.finish_mask_bucket_jit(
+                key, state, index, mus=mus_w, alphas=alphas_w, shifts=shift_w
+            )
+            row_alive = executor.slot_mask_bucket_jit(wmask, sel)  # (n_cap,)
+        elif true_params is None:
             wmask = executor.finish_mask_jit(key, deadline)  # (W,) workers
+            row_alive = executor.slot_mask_jit(wmask)  # (n,) coded rows
         else:
-            mus_w, alphas_w, shift_w = true_params
             wmask = executor.finish_mask_jit(
                 key, deadline, mus=mus_w, alphas=alphas_w, shifts=shift_w
             )
-        row_alive = executor.slot_mask_jit(wmask)  # (n,) coded rows
+            row_alive = executor.slot_mask_jit(wmask)  # (n,) coded rows
         a, ok = decode_vector_jit(b_mat, row_alive)
         w_part = a @ b_mat  # (k,) partition weights; == 1 when decodable
         agg = jax.tree.map(
@@ -314,6 +346,8 @@ class Trainer:
                 cfg.scheme,
                 scheme_params=cfg.scheme_params,
                 deadline_safety=cfg.deadline_safety,
+                bucket_config=cfg.bucket_config(),
+                telemetry=self.telemetry,
             )
             self._build_coded_step()
             if cfg.scenario is not None:
@@ -343,16 +377,23 @@ class Trainer:
                         replan_cost=cfg.adapt_replan_cost,
                     ),
                     telemetry=self.telemetry,
-                    on_replan=self._build_coded_step,
+                    on_replan=self._on_replan,
                 )
         else:
             self.step_fn = make_train_step(model, opt_cfg)
 
     def _build_coded_step(self) -> None:
-        """(Re)compile the coded step against the executor's current plan."""
+        """(Re)compile the coded step against the executor's current plan.
+
+        Bucket mode sizes the assignment matrix at the bucket slot
+        CAPACITY: the fixed-shape decode masks capacity rows dead, so
+        one matrix (and one compiled step) serves every admitted bucket.
+        """
+        buckets = self.executor.buckets
+        n_rows = buckets.n_cap if buckets is not None else self.executor.n
         self.b_matrix = np.asarray(
             assignment_matrix(
-                self.executor.n,
+                n_rows,
                 self.partitions,
                 key=jax.random.PRNGKey(self.cfg.seed),
             )
@@ -363,23 +404,39 @@ class Trainer:
         )
 
         def counted(params, opt_state, batch, key, deadline,
-                    true_params=None):
+                    true_params=None, bucket_args=None):
             self.traces += 1  # python side effect: runs only while tracing
-            return raw(params, opt_state, batch, key, deadline, true_params)
+            return raw(params, opt_state, batch, key, deadline, true_params,
+                       bucket_args)
 
         self.coded_step_fn = jax.jit(counted, donate_argnums=(0, 1))
+
+    def _on_replan(self) -> None:
+        """Replan hook: rebuild the compiled step only when shapes moved.
+
+        A bucket-switch replan (``last_replan_structural`` False) keeps
+        the compiled step valid — the new branch reaches it through
+        ``bucket_args`` at the next step, costing zero retraces.
+        """
+        if (
+            self.executor.buckets is not None
+            and not self.executor.last_replan_structural
+        ):
+            return
+        self._build_coded_step()
 
     def replan(self, new_cluster: ClusterSpec):
         """Elastic replan mid-training; scheme params preserved.
 
         Rebuilds the deadline, assignment matrix and the compiled step
-        for the new membership (worker/slot shapes change), and surfaces
-        the replan through telemetry.
+        for the new membership (worker/slot shapes change — skipped on a
+        non-structural bucket switch), and surfaces the replan through
+        telemetry.
         """
         if self.executor is None:
             raise ValueError("replan requires coded training (cfg.cluster)")
         plan = self.executor.replan(new_cluster)
-        self._build_coded_step()
+        self._on_replan()
         self.telemetry.event(
             "replan", workers=plan.num_workers, n=plan.n,
             deadline=self.executor.deadline,
@@ -423,10 +480,14 @@ class Trainer:
                     self.executor.worker_param_arrays(self.trace.at(step))
                     if self.trace is not None else None
                 )
+                bucket_args = (
+                    self.executor.bucket_args()
+                    if self.executor.buckets is not None else None
+                )
                 params, opt_state, metrics = self.coded_step_fn(
                     params, opt_state, batch, skey,
                     jnp.float32(self.executor.deadline),
-                    true_params,
+                    true_params, bucket_args,
                 )
                 if self.controller is not None:
                     # the controller observes the SAME per-worker times

@@ -1,0 +1,263 @@
+"""Jitted planner fast path + plan bucketing (ISSUE 7 / DESIGN.md §11).
+
+Parity: every registered scheme's ``allocate`` through the jitted cores
+(``core/alloc_fastpath``) must match the eager/numpy oracle
+(``allocation.eager_oracle()``) — real loads and t_star to float64
+round-off, integerized loads and code size EXACTLY — across a cluster
+grid that covers the hard corners: heterogeneous G=6, comm-shifted
+finite links (zero-load excluded groups), and near-deterministic
+workers (large alpha*mu, the Lambert-W log-space regime).
+
+Also pinned here: the eager bisections' asserted residual bound
+(< 1e-9, an ISSUE 7 satellite), the allocate memo-cache hit/miss
+counters, bucket quantization/signature semantics, and the headline
+property of bucket-switch replanning — a non-structural replan through
+``CodedRoundExecutor.replan`` leaves a compiled consumer program's
+trace count pinned at 1.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    allocation,
+    make_scheme,
+    scheme_names,
+    scheme_params,
+)
+from repro.core.schemes import allocate_cache_clear, allocate_cache_info
+from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.plan_bucket import (
+    BucketConfig,
+    bucket_signature,
+    quantize_loads_int,
+)
+from repro.runtime.telemetry import Telemetry
+
+K = 512
+
+# same generic instantiation as test_scheme_invariants: canonical
+# fallback per accepted PARAM NAME, no per-scheme knowledge
+PARAM_FALLBACKS = {
+    "n": lambda cluster, k: 1.5 * k,
+    "r": lambda cluster, k: max(1, cluster.total_workers // 2),
+}
+
+
+def instantiate(name: str, cluster: ClusterSpec, k: int):
+    try:
+        return make_scheme(name)
+    except ValueError:
+        params = {
+            p: fb(cluster, k)
+            for p, fb in PARAM_FALLBACKS.items()
+            if p in scheme_params(name)
+        }
+        return make_scheme(name, **params)
+
+
+CLUSTERS = {
+    "base_g3": lambda: ClusterSpec.make(
+        [8, 16, 8], [4.0, 1.0, 0.25], 1.0, [16.0, 8.0, 4.0]
+    ),
+    "hetero_g6": lambda: ClusterSpec.make(
+        [8, 16, 8, 4, 6, 10],
+        [4.0, 1.0, 0.25, 2.0, 0.5, 8.0],
+        1.0,
+        [16.0, 8.0, 4.0, 2.0, 8.0, 32.0],
+    ),
+    # slow links: comm_aware's transfer shifts exceed the deadline for
+    # the worst group -> zero-load exclusion on both paths
+    "comm_shifted": lambda: ClusterSpec.make(
+        [6, 10, 8], [4.0, 1.0, 0.4], 1.0, [8.0, 2.0, 0.5]
+    ),
+    # alpha*mu up to 1000: W_{-1}(-e^{-(alpha mu + 1)}) underflows
+    # unless evaluated in log space (both paths share lambertwm1_neg_exp)
+    "near_deterministic": lambda: ClusterSpec.make(
+        [8, 8], [50.0, 1.0], [20.0, 1.0], [16.0, 8.0]
+    ),
+}
+
+
+# ------------------------------------------------------------ parity
+@pytest.mark.parametrize("cluster_kind", sorted(CLUSTERS))
+@pytest.mark.parametrize("name", scheme_names())
+def test_fastpath_matches_eager_oracle(name, cluster_kind):
+    cluster = CLUSTERS[cluster_kind]()
+    scheme = instantiate(name, cluster, K)
+    allocate_cache_clear()
+    fast = scheme.allocate(cluster, K)
+    allocate_cache_clear()
+    with allocation.eager_oracle():
+        eager = scheme.allocate(cluster, K)
+    np.testing.assert_allclose(
+        fast.loads, eager.loads, rtol=1e-9, atol=1e-9, err_msg=name
+    )
+    np.testing.assert_allclose(
+        fast.r, eager.r, rtol=1e-9, atol=1e-9, err_msg=name
+    )
+    np.testing.assert_allclose(fast.n, eager.n, rtol=1e-9, err_msg=name)
+    if np.isnan(eager.t_star):
+        assert np.isnan(fast.t_star), name
+    else:
+        np.testing.assert_allclose(
+            fast.t_star, eager.t_star, rtol=1e-9, err_msg=name
+        )
+    # deployment must be bit-identical: the integerized loads decide
+    # shapes, and a one-row disagreement would change compiled programs
+    assert fast.loads_int.tolist() == eager.loads_int.tolist(), name
+    assert fast.n_int == eager.n_int, name
+
+
+def test_eager_oracle_restores_flag():
+    assert allocation.fastpath_enabled()
+    with allocation.eager_oracle():
+        assert not allocation.fastpath_enabled()
+        with allocation.eager_oracle():
+            assert not allocation.fastpath_enabled()
+        assert not allocation.fastpath_enabled()
+    assert allocation.fastpath_enabled()
+
+
+# ------------------------------------------- eager bisection residuals
+def test_eager_bisections_meet_residual_bound():
+    """The eager solvers' asserted residual bound holds (and is <= 1e-9).
+
+    Residuals are recomputed here independently of the in-function
+    asserts, so a loosened tolerance cannot pass silently.
+    """
+    assert allocation.BISECT_RESIDUAL_BOUND <= 1e-9
+    cluster = CLUSTERS["comm_shifted"]()
+    r = cluster.total_workers // 2
+    split = allocation.group_code_split(cluster, r, fastpath=False)
+    # eq. (26): the per-group split must sum back to r
+    assert abs(float(np.sum(split)) - r) < 1e-9 * max(1.0, float(r))
+    t = allocation.comm_t_star(cluster, 1.0, 1.0, fastpath=False)
+    c, g, _ = allocation.comm_deadline_terms(cluster, 1.0, 1.0)
+    # deadline equation: sum_j g_j (t - c_j)_+ = 1
+    covered = float(np.sum(g * np.maximum(t - c, 0.0)))
+    assert abs(covered - 1.0) < 1e-9
+
+
+# --------------------------------------------------- memo-cache stats
+def test_allocate_memo_cache_counters():
+    allocate_cache_clear()
+    cluster = CLUSTERS["base_g3"]()
+    scheme = make_scheme("optimal")
+    info = allocate_cache_info()
+    assert (info["hits"], info["misses"]) == (0, 0)
+    scheme.allocate(cluster, K)
+    scheme.allocate(cluster, K)  # memoized repeat
+    info = allocate_cache_info()
+    assert (info["hits"], info["misses"]) == (1, 1)
+    assert info["size"] >= 1
+    # the solver path is part of the key: an oracle solve can never be
+    # served a fastpath-computed plan
+    with allocation.eager_oracle():
+        scheme.allocate(cluster, K)
+    assert allocate_cache_info()["misses"] == 2
+    allocate_cache_clear()
+    info = allocate_cache_info()
+    assert (info["size"], info["hits"], info["misses"]) == (0, 0, 0)
+
+
+# ------------------------------------------------- bucket quantization
+def test_quantize_loads_rounds_up_and_keeps_zeros():
+    q = quantize_loads_int([0, 1, 7, 8, 9], 4)
+    assert q.tolist() == [0, 4, 8, 8, 12]
+    assert quantize_loads_int([0, 3], 1).tolist() == [0, 3]
+
+
+def test_bucket_signature_identity():
+    c = CLUSTERS["base_g3"]()
+    assert bucket_signature(c, [8, 8, 4], K) == bucket_signature(
+        c, np.asarray([8, 8, 4]), K
+    )
+    assert bucket_signature(c, [8, 8, 4], K) != bucket_signature(
+        c, [8, 8, 8], K
+    )
+    assert bucket_signature(c, [8, 8, 4], K) != bucket_signature(
+        c, [8, 8, 4], K + 1
+    )
+
+
+def test_bucket_config_validation():
+    with pytest.raises(ValueError, match="quantum"):
+        BucketConfig(quantum=0)
+    with pytest.raises(ValueError, match="capacity"):
+        BucketConfig(capacity=0)
+    with pytest.raises(ValueError, match="n_headroom"):
+        BucketConfig(n_headroom=0.5)
+
+
+# ------------------------------------------- bucket-switch replanning
+def test_bucket_switch_replan_is_trace_free():
+    """Non-structural replans never retrace a compiled consumer.
+
+    A jitted probe (stand-in for the fused serve/train step) consumes
+    ``bucket_args()`` as runtime arguments; a mu-drift replan changes
+    only array values + the bucket index, so the python trace counter
+    stays at 1. A membership change is structural and DOES retrace.
+    """
+    cluster = ClusterSpec.make([8, 16, 8], [4.0, 1.0, 0.25], 1.0)
+    telemetry = Telemetry(None)
+    exe = CodedRoundExecutor(
+        cluster, K, "optimal",
+        bucket_config=BucketConfig(quantum=16), telemetry=telemetry,
+    )
+    traces = {"n": 0}
+
+    def probe(key, state, index):
+        traces["n"] += 1  # python side effect: runs only while tracing
+        mask, sel = exe.finish_mask_bucket_jit(key, state, index)
+        return jnp.sum(exe.slot_mask_bucket_jit(mask, sel))
+
+    step = jax.jit(probe)
+    key = jax.random.PRNGKey(3)
+    step(key, *exe.bucket_args()).block_until_ready()
+    assert traces["n"] == 1
+
+    # mu drift on the big middle group: same membership, new plan
+    g1 = dataclasses.replace(cluster.groups[1], mu=3.0)
+    drifted = ClusterSpec(groups=(cluster.groups[0], g1) + cluster.groups[2:])
+    exe.replan(drifted)
+    assert not exe.last_replan_structural
+    step(jax.random.fold_in(key, 1), *exe.bucket_args()).block_until_ready()
+    assert traces["n"] == 1, "bucket-switch replan retraced the consumer"
+
+    # replan BACK to the original cluster: same quantized signature
+    exe.replan(cluster)
+    assert not exe.last_replan_structural
+    assert exe.last_bucket_hit
+    step(jax.random.fold_in(key, 2), *exe.bucket_args()).block_until_ready()
+    assert traces["n"] == 1
+
+    events = [e["event"] for e in telemetry.events
+              if e.get("event", "").startswith("plan_bucket")]
+    assert "plan_bucket_hit" in events
+    assert "plan_bucket_miss" in events
+
+    # structural escape: a worker leaves -> shapes change -> one retrace
+    g0 = dataclasses.replace(
+        cluster.groups[0], num_workers=cluster.groups[0].num_workers - 1
+    )
+    exe.replan(ClusterSpec(groups=(g0,) + cluster.groups[1:]))
+    assert exe.last_replan_structural
+    step(jax.random.fold_in(key, 3), *exe.bucket_args()).block_until_ready()
+    assert traces["n"] == 2
+
+
+def test_bucket_probe_predicts_hit_without_committing():
+    cluster = ClusterSpec.make([8, 16, 8], [4.0, 1.0, 0.25], 1.0)
+    exe = CodedRoundExecutor(
+        cluster, K, "optimal", bucket_config=BucketConfig(quantum=16)
+    )
+    sigs_before = exe.buckets.signatures
+    # the executor's own (quantized) plan is admitted -> probing the
+    # plan's cluster is a hit, and probing must not mutate the set
+    assert exe.bucket_probe(cluster) is True
+    assert exe.buckets.signatures == sigs_before
