@@ -1,0 +1,158 @@
+"""Performance regression gate: measured serving perf vs committed goldens.
+
+``PYTHONPATH=src python -m benchmarks.perf_gate [--tolerance 0.2]
+[--absolute] [--update-golden]``
+
+Correctness regressions already fail CI; this module makes *performance*
+regressions do the same. It re-measures the serving path the way
+``benchmarks/serve_throughput.py`` does (legacy numpy host loop vs the
+jit pipeline, plus the per-round erasure decode) and compares against
+the committed golden ``artifacts/bench/serve_throughput.json`` with a
+tolerance band. On a regression past the band it exits non-zero, so the
+CI fast lane goes red on a >=20% tokens/s or per-round decode-latency
+regression the same way it does on a failing test.
+
+Two metric classes, because shared CI runners are not the machine that
+wrote the golden:
+
+* **ratio metrics** (always enforced) — jit/legacy tokens-per-second
+  speedup and numpy/jit per-round decode-latency speedup. Both paths
+  run on the same machine in the same process, so machine speed divides
+  out; a drop means the *architecture* regressed (e.g. a host sync
+  sneaking into the compiled pipeline), which is exactly what a perf
+  gate exists to catch.
+* **absolute metrics** (warn-only unless ``--absolute``) — raw jit
+  tokens/s and per-round decode seconds. Meaningful on a stable
+  dedicated runner; noise on shared hardware, hence the flag.
+
+The fresh measurement is redirected to a temp dir so the gate NEVER
+overwrites the golden it compares against; ``--update-golden`` is the
+explicit re-baseline path. Results (per-metric rows + ``perf_gate``
+telemetry events, DESIGN.md §8) land in
+``artifacts/bench/perf_gate.json`` and upload with the other bench
+artifacts in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from benchmarks import common, serve_throughput
+from repro.runtime.telemetry import Telemetry
+
+GOLDEN = "serve_throughput"
+
+#: (name, path into the record, higher-is-better) — enforced ratios
+RATIO_METRICS = (
+    ("speedup_tokens_per_s", ("speedup_tokens_per_s",), True),
+    ("decode_speedup", ("decode_latency_s", "speedup"), True),
+)
+#: absolute metrics: machine-dependent, warn-only without --absolute
+ABS_METRICS = (
+    ("jit_tokens_per_s", ("jit", "tokens_per_s"), True),
+    ("jit_decode_latency_s", ("decode_latency_s", "jit"), False),
+)
+
+
+def _get(record: dict, path) -> float:
+    for p in path:
+        record = record[p]
+    return float(record)
+
+
+def _measure(runs: int) -> dict:
+    """Fresh serve_throughput record, written to a temp dir — the
+    committed golden must survive the measurement that is judged
+    against it."""
+    keep = common.ARTIFACTS
+    tmp = tempfile.mkdtemp(prefix="perf_gate_")
+    common.ARTIFACTS = tmp
+    try:
+        return serve_throughput.run(runs=runs)
+    finally:
+        common.ARTIFACTS = keep
+
+
+def run(tolerance: float = 0.2, absolute: bool = False, runs: int = 3,
+        update_golden: bool = False):
+    golden_path = os.path.join(common.ARTIFACTS, f"{GOLDEN}.json")
+    if update_golden:
+        record = serve_throughput.run(runs=runs)  # writes the golden
+        print(f"re-baselined golden {os.path.abspath(golden_path)}")
+        return record
+    if not os.path.exists(golden_path):
+        raise SystemExit(
+            f"no golden at {golden_path}; run with --update-golden first"
+        )
+    with open(golden_path) as f:
+        golden = json.load(f)
+    measured = _measure(runs)
+
+    tel = Telemetry(None)
+    rows, failures = [], []
+    checks = [(m, True) for m in RATIO_METRICS] + \
+             [(m, absolute) for m in ABS_METRICS]
+    for (name, path, higher), enforced in checks:
+        m, g = _get(measured, path), _get(golden, path)
+        # one-sided band: only regressions gate — a faster run passes
+        bound = g * (1 - tolerance) if higher else g * (1 + tolerance)
+        ok = m >= bound if higher else m <= bound
+        rows.append({
+            "metric": name, "measured": m, "golden": g, "bound": bound,
+            "passed": ok, "enforced": enforced,
+        })
+        tel.event(
+            "perf_gate", metric=name, measured=m, golden=g, bound=bound,
+            tolerance=tolerance, passed=ok, enforced=enforced,
+        )
+        if enforced and not ok:
+            failures.append(
+                f"{name}: measured {m:.4g} vs golden {g:.4g} "
+                f"(bound {bound:.4g}, tolerance {tolerance:.0%})"
+            )
+    print(common.table(rows, ["metric", "measured", "golden", "bound",
+                              "passed", "enforced"]))
+    record = {
+        "golden": GOLDEN,
+        "tolerance": tolerance,
+        "absolute_enforced": absolute,
+        "runs": runs,
+        "metrics": rows,
+        "passed": not failures,
+        "events": tel.events,
+    }
+    path = common.save("perf_gate", record)
+    print(f"wrote {path}")
+    if failures:
+        raise SystemExit(
+            "perf gate FAILED:\n  " + "\n  ".join(failures)
+        )
+    print(f"perf gate passed ({len(rows)} metrics, "
+          f"tolerance {tolerance:.0%})")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative regression before the gate "
+                         "fails (default 0.2 = 20%%, generous for shared "
+                         "CI runners)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also ENFORCE the absolute metrics (raw tokens/s "
+                         "and decode seconds); default warns only — "
+                         "absolutes are machine-dependent")
+    ap.add_argument("--runs", type=int, default=3,
+                    help="timed generate repetitions per path")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="re-baseline: overwrite the committed golden "
+                         "with a fresh measurement instead of gating")
+    args = ap.parse_args()
+    run(tolerance=args.tolerance, absolute=args.absolute, runs=args.runs,
+        update_golden=args.update_golden)
+
+
+if __name__ == "__main__":
+    main()

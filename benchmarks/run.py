@@ -21,6 +21,7 @@ from benchmarks import (
     fig_adapt,
     fig_comm,
     fig_grad,
+    perf_gate,
     roofline,
     serve_frontend,
     serve_throughput,
@@ -44,6 +45,8 @@ def main():
         "alloc_fastpath": alloc_fastpath, "roofline": roofline,
         "serve_throughput": serve_throughput,
         "serve_frontend": serve_frontend,
+        # after serve_throughput: gates the measurement it just re-based
+        "perf_gate": perf_gate,
     }
     if args.list:
         print("\n".join(mods))
@@ -61,9 +64,9 @@ def main():
         raise SystemExit("nothing to run: --skip removed every benchmark")
     for name in names:
         print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
-        t0 = time.time()
+        t0 = time.perf_counter()
         mods[name].run()
-        print(f"[{name} done in {time.time() - t0:.1f}s]")
+        print(f"[{name} done in {time.perf_counter() - t0:.1f}s]")
 
 
 if __name__ == "__main__":

@@ -293,7 +293,9 @@ def dryrun_cell(config: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
     model = Model(config)
-    t0 = time.time()
+    # perf_counter, not time.time(): wall clock is not monotonic (an NTP
+    # step mid-compile would report a negative/garbage compile_s)
+    t0 = time.perf_counter()
 
     if shape.kind == "train":
         (p_s, o_s, b_s), shardings, opt_cfg = _abstract_train_inputs(
@@ -320,7 +322,7 @@ def dryrun_cell(config: ModelConfig, shape: ShapeConfig, *, multi_pod: bool,
             lowered = jitted.lower(p_s, c_s, t_s, pos_s)
 
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):  # jax<=0.4.x wraps the dict in a list

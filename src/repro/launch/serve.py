@@ -26,7 +26,7 @@ from repro.serve import make_workload, workload_names
 from repro.sim import make_scenario, scenario_names
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -95,7 +95,15 @@ def main():
                          "divided by it)")
     ap.add_argument("--trace-seed", type=int, default=0,
                     help="workload trace seed for --trace")
-    args = ap.parse_args()
+    ap.add_argument("--measure-times", action="store_true",
+                    help="measured-reality loop (DESIGN.md §12): time "
+                         "each compiled dispatch with a RoundClock and "
+                         "adapt from wall-clock observations instead of "
+                         "simulated ground truth (requires --coded)")
+    ap.add_argument("--telemetry", default=None,
+                    help="JSONL telemetry sink (round_timing / "
+                         "adapt_decision / request events)")
+    args = ap.parse_args(argv)
     if args.trace is not None and args.scenario is not None:
         raise SystemExit("--trace and --scenario are separate serving "
                          "modes; pick one")
@@ -108,6 +116,12 @@ def main():
     if args.adapt_every is not None and args.scenario is None:
         raise SystemExit("--adapt-every requires --scenario (closed-loop "
                          "serving is driven by a scenario trace)")
+    if args.measure_times and not args.coded:
+        raise SystemExit("--measure-times requires --coded (round times "
+                         "are decomposed over the coded fleet)")
+    if args.measure_times and args.legacy_decode:
+        raise SystemExit("--measure-times times compiled dispatches; "
+                         "drop --legacy-decode")
 
     # cold-start compile reuse: every program this process builds
     # (bucket branches included) persists to the on-disk JAX cache
@@ -170,15 +184,28 @@ def _serve_trace(server, args, config):
     virtual rounds (1 decode step = 1 round, 1 batched prefill = 1
     round), throughput in wall-clock tokens/s.
     """
+    from repro.runtime.telemetry import Telemetry
+
     wl = make_workload(
         args.trace, arrival_rate=args.arrival_rate,
         num_requests=args.num_requests, vocab=config.vocab_size,
     )
     trace = wl.trace(seed=args.trace_seed)
-    rep = server.serve(
-        trace, slots=args.slots,
-        admission_threshold=args.admission_threshold,
-    )
+    with Telemetry(args.telemetry) as tel:
+        clock = None
+        if args.measure_times:
+            from repro.runtime.timing import RoundClock
+
+            clock = RoundClock(server.coded_head.executor, telemetry=tel)
+        rep = server.serve(
+            trace, slots=args.slots,
+            admission_threshold=args.admission_threshold,
+            telemetry=tel, clock=clock,
+        )
+    if clock is not None:
+        unit = "-" if clock.unit_s is None else f"{clock.unit_s:.3e}"
+        print(f"measured: {clock.fed}/{clock.rounds} rounds fed, "
+              f"unit_s={unit}")
     lat = rep.latencies()
     print(f"workload {wl.name!r}: {len(trace)} requests "
           f"(rate={wl.arrival_rate}/round, seed={args.trace_seed})")
@@ -201,8 +228,12 @@ def _serve_scenario(server, prompts, extras, args, cluster):
     ``AdaptiveController`` observes the round times and replans the
     coded head (rebuilding the compiled pipeline) when its hysteresis
     rule fires — the same controller the trainer runs (DESIGN.md §7).
+    With ``--measure-times`` each generate call runs under a
+    ``RoundClock`` and the controller ingests MEASURED wall-clock round
+    times instead of simulated ground truth (DESIGN.md §12).
     """
     from repro.runtime.control import AdaptConfig, AdaptiveController
+    from repro.runtime.telemetry import Telemetry
 
     # build the scenario AT the round budget so its factory anchors
     # event times/drift rates to the rounds actually served (a default
@@ -211,6 +242,7 @@ def _serve_scenario(server, prompts, extras, args, cluster):
     spec = make_scenario(args.scenario, horizon=max(rounds, 1))
     trace = spec.trace(cluster, seed=0)
     head = server.coded_head
+    tel = Telemetry(args.telemetry)
     controller = None
     if args.adapt_every is not None:
         controller = AdaptiveController(
@@ -220,35 +252,61 @@ def _serve_scenario(server, prompts, extras, args, cluster):
                 threshold=(0.05 if args.adapt_threshold is None
                            else args.adapt_threshold),
             ),
+            telemetry=tel,
             on_replan=server.refresh_coded_head,
         )
+    clock = None
+    if args.measure_times:
+        from repro.runtime.timing import RoundClock
+
+        clock = RoundClock(head.executor, telemetry=tel)
     key = jax.random.PRNGKey(7)
     t0 = time.perf_counter()
     toks = 0
     for t in range(rounds):
         true_cluster = trace.at(t)
         server.set_true_cluster(true_cluster)
-        out = server.generate(
-            prompts, args.max_new, key=jax.random.fold_in(key, t),
-            extras=extras,
-        )
-        toks += out.shape[0] * args.max_new
-        if controller is not None:
-            d = controller.observe_truth(
-                jax.random.fold_in(key, 10_000 + t), true_cluster
+        gkey = jax.random.fold_in(key, t)
+        # the observation key matches the simulated path round for round,
+        # so measured and simulated runs are comparable draw by draw
+        okey = jax.random.fold_in(key, 10_000 + t)
+        d = None
+        if clock is not None:
+            timing = clock.measure(
+                lambda: server.generate(
+                    prompts, args.max_new, key=gkey, extras=extras
+                ),
+                key=okey, true_cluster=true_cluster,
             )
-            if d is not None and d.replanned:
-                print(f"[round {t}] replanned ({d.reason}): "
-                      f"deadline -> {head.deadline:.4f}, "
-                      f"loads {head.plan.loads_per_worker.tolist()}")
+            out = timing.result
+            if controller is not None:
+                d = controller.observe_timing(timing)
+        else:
+            out = server.generate(
+                prompts, args.max_new, key=gkey, extras=extras
+            )
+            if controller is not None:
+                d = controller.observe_truth(okey, true_cluster)
+        toks += out.shape[0] * args.max_new
+        if d is not None and d.replanned:
+            if clock is not None and head.executor.last_replan_structural:
+                clock.discard_next()  # next round pays the retrace
+            print(f"[round {t}] replanned ({d.reason}): "
+                  f"deadline -> {head.deadline:.4f}, "
+                  f"loads {head.plan.loads_per_worker.tolist()}")
     dt = time.perf_counter() - t0
     print(f"scenario {spec.name!r}: {rounds} rounds, {toks} tokens in "
           f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
+    if clock is not None:
+        unit = "-" if clock.unit_s is None else f"{clock.unit_s:.3e}"
+        print(f"measured: {clock.fed}/{clock.rounds} rounds fed, "
+              f"unit_s={unit}")
     if controller is not None:
         replans = [d for d in controller.decisions if d.replanned]
         print(f"controller: {len(controller.decisions)} decisions, "
               f"{len(replans)} replans at rounds "
               f"{[d.round for d in replans]}")
+    tel.close()
 
 
 if __name__ == "__main__":

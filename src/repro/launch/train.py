@@ -75,6 +75,11 @@ def main(argv=None):
                          "and replan via an in-program bucket switch: "
                          "adaptive replans within the admitted capacity "
                          "skip the step recompile (DESIGN.md §11)")
+    ap.add_argument("--measure-times", action="store_true",
+                    help="measured-reality loop (DESIGN.md §12): time each "
+                         "coded dispatch with a RoundClock and adapt from "
+                         "wall-clock observations instead of simulated "
+                         "ground truth (requires --hetero-groups)")
     args = ap.parse_args(argv)
     if args.hetero_groups is None:
         # coded flags must not silently no-op without a fleet to plan for
@@ -85,7 +90,9 @@ def main(argv=None):
                                  ("--scenario", args.scenario),
                                  ("--adapt-every", args.adapt_every),
                                  ("--adapt-threshold", args.adapt_threshold),
-                                 ("--bucket-quantum", args.bucket_quantum))
+                                 ("--bucket-quantum", args.bucket_quantum),
+                                 ("--measure-times",
+                                  args.measure_times or None))
             if v is not None
         ]
         if coded_flags:
@@ -131,6 +138,7 @@ def main(argv=None):
             0.05 if args.adapt_threshold is None else args.adapt_threshold
         ),
         bucket_quantum=args.bucket_quantum,
+        measure_times=args.measure_times,
     )
     if args.checkpoint_dir and not args.resume:
         # fresh run: ignore stale checkpoints by training from step 0 only
@@ -166,6 +174,10 @@ def main(argv=None):
             skipped = sum(h.get("skipped", 0.0) for h in history)
             print(f"coded rounds logged: {len(history)}, skipped steps "
                   f"among them: {int(skipped)}")
+    if trainer.clock is not None:
+        ck = trainer.clock
+        unit = "-" if ck.unit_s is None else f"{ck.unit_s:.3e}"
+        print(f"measured: {ck.fed}/{ck.rounds} rounds fed, unit_s={unit}")
     if trainer.controller is not None:
         ctl = trainer.controller
         replanned = [d for d in ctl.decisions if d.replanned]

@@ -9,6 +9,7 @@ from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.fault_tolerance import ElasticController, StragglerTracker
 from repro.runtime.serve_loop import CodedLMHead, ServeConfig, Server
 from repro.runtime.telemetry import Telemetry
+from repro.runtime.timing import RoundClock, RoundTiming
 from repro.runtime.train_loop import (
     TrainConfig,
     Trainer,
@@ -23,6 +24,8 @@ __all__ = [
     "CodedRoundExecutor",
     "Decision",
     "ElasticController",
+    "RoundClock",
+    "RoundTiming",
     "ServeConfig",
     "Server",
     "StragglerTracker",

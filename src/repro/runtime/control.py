@@ -316,10 +316,12 @@ class AdaptiveController:
                 inv_b = np.where(np.isfinite(bw), 1.0 / bw, 0.0)[gid]
                 times = times - download * inv_b * np.asarray(loads, float) \
                     / self.executor.k
-            # estimate lag can overshoot the subtraction; the MLE needs
-            # positive times (inf = missing stays inf)
-            times = np.where(np.isfinite(times),
-                             np.maximum(times, 1e-9), times)
+        # single ingest point for the MLE: finite times must be positive.
+        # Non-positive values reach here two ways — bandwidth-estimate lag
+        # overshooting the comm-term subtraction above, and (on the
+        # measured path) wall-clock jitter — so the clamp sits outside
+        # the transfer branch (inf = missing stays inf).
+        times = np.where(np.isfinite(times), np.maximum(times, 1e-9), times)
         self.tracker.observe_round(times, loads, self.executor.k)
         if membership is not None:
             self._membership = tuple(int(m) for m in membership)
@@ -343,13 +345,7 @@ class AdaptiveController:
         (stationary truth).
         """
         exe = self.executor
-        if true_cluster is None:
-            mus, alphas, shifts = exe.worker_params
-        else:
-            mus, alphas, shifts = exe.worker_param_arrays(true_cluster)
-        times = np.asarray(
-            exe.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
-        )
+        times, shifts = exe.round_observation(key, true_cluster)
         sch = exe.scheme
         comm = (
             sch.latency_model is LatencyModel.COMM_DELAY
@@ -361,8 +357,27 @@ class AdaptiveController:
                 None if true_cluster is None
                 else tuple(g.num_workers for g in true_cluster.groups)
             ),
-            transfer_times=np.asarray(shifts) if comm else None,
+            transfer_times=shifts if comm else None,
             payload=float(sch.upload) if comm else 1.0,
+        )
+
+    def observe_timing(self, timing) -> Decision | None:
+        """Ingest one measured round (a ``RoundTiming`` from
+        ``runtime.timing.RoundClock``). The wall-clock counterpart of
+        ``observe_truth``: times/transfer shares were measured and
+        decomposed by the clock, membership still comes from the
+        scenario/registration layer via the timing. A timing the clock
+        declined to feed (warmup, outlier, post-replan recompile —
+        ``timing.times is None``) is a no-op so callers can feed every
+        round unconditionally.
+        """
+        if timing is None or timing.times is None:
+            return None
+        return self.observe_round(
+            timing.times,
+            membership=timing.membership,
+            transfer_times=timing.transfer_times,
+            payload=timing.payload,
         )
 
     def estimated_cluster(self) -> ClusterSpec:

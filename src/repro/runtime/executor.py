@@ -342,6 +342,28 @@ class CodedRoundExecutor:
             self.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
         )
 
+    def round_observation(
+        self, key, cluster: ClusterSpec | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side: one round's ((W,) times, (W,) per-worker shifts).
+
+        The single observation feed shared by the simulated closed loop
+        (``AdaptiveController.observe_truth``) and the measured one
+        (``runtime.timing.RoundClock``, which uses the times as the
+        relative split of a wall-clock round and the shifts as the
+        transfer shares). ``cluster`` injects the scenario layer's TRUE
+        parameters; leavers carry ``inf`` shift, so their times come
+        back ``inf`` (never responded).
+        """
+        if cluster is None:
+            mus, alphas, shifts = self.worker_params
+        else:
+            mus, alphas, shifts = self.worker_param_arrays(cluster)
+        times = np.asarray(
+            self.round_times_jit(key, mus=mus, alphas=alphas, shifts=shifts)
+        )
+        return times, np.asarray(shifts)
+
     # ------------------------------------------------------- bucket switch
     def bucket_args(self):
         """(stacked bucket state, active index) for a compiled program.

@@ -77,6 +77,11 @@ class StragglerTracker:
         loads: (N,) rows assigned. Returns the boolean finished mask.
         """
         times = np.asarray(times, float)
+        # defense in depth: the controller clamps at its ingest point,
+        # but a direct caller feeding measured times can still hand us
+        # non-positives (clock jitter) — the MLE normalization divides
+        # and mins over these, so keep finite times positive here too
+        times = np.where(np.isfinite(times), np.maximum(times, 1e-9), times)
         finished = np.isfinite(times)
         if deadline is not None:
             finished &= times <= deadline

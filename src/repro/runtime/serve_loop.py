@@ -347,6 +347,9 @@ class Server:
         #: optional ground-truth (mus_w, alphas_w, shift_w) the next
         #: generate call samples straggling from (scenario closed loop)
         self._true_params = None
+        #: the ClusterSpec behind _true_params (RoundClock decomposition
+        #: needs the spec, not the flattened arrays)
+        self._true_cluster = None
         self._generate_fn = jax.jit(
             self._gen_program, static_argnames=("max_new",)
         )
@@ -374,6 +377,7 @@ class Server:
             None if cluster is None
             else self.coded_head.executor.worker_param_arrays(cluster)
         )
+        self._true_cluster = cluster
 
     def refresh_coded_head(self) -> None:
         """Rebind the head to its executor's current plan and re-jit.
@@ -394,9 +398,11 @@ class Server:
         if not self.coded_head.executor.last_replan_structural:
             self.coded_head.rebind_soft()
             self._true_params = None  # possibly stale after any replan
+            self._true_cluster = None
             return
         self.coded_head.refresh()
         self._true_params = None  # stale shapes after a replan
+        self._true_cluster = None
         self._generate_fn = jax.jit(
             self._gen_program, static_argnames=("max_new",)
         )
@@ -609,7 +615,7 @@ class Server:
               max_out: int | None = None, decode_block: int = 4,
               queue_cap: int = 64, admission_threshold: float = 1.0,
               controller=None, round_latency=None, telemetry=None,
-              key=None) -> ServeReport:
+              clock=None, key=None) -> ServeReport:
         """Continuous batching: serve a request trace through S slots.
 
         ``trace``: iterable of ``serve.workload.Request`` (arrivals in
@@ -628,8 +634,19 @@ class Server:
         at start, and requests are shed when the backlog×slowdown
         projection blows their deadline class's budget
         (``serve.scheduler.SlotScheduler``).
+
+        ``clock`` (a ``runtime.timing.RoundClock``) turns on the
+        measured-reality loop (§12): each fused dispatch is timed
+        (perf_counter + block_until_ready — chunks no longer overlap,
+        that is the price of measuring), decomposed per worker, and —
+        when ``controller`` is given — fed to
+        ``controller.observe_timing`` so admission control and replans
+        run on wall-clock evidence. Requires a coded head.
         """
         from repro.serve.scheduler import SlotScheduler
+
+        if clock is not None and self.coded_head is None:
+            raise ValueError("clock (measured serving) requires a coded head")
 
         trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
         if not trace:
@@ -715,12 +732,45 @@ class Server:
                     min(s.request.out_len - s.generated
                         for s in sched.slots if s.busy and not s.done),
                 )
-                cache, logits, pos, _ = self._serve_step_fn(
-                    self.params, cache, logits, pos, prompts, lengths,
-                    rows, jnp.asarray(active),
-                    jax.random.fold_in(key, call), deadline, true_params,
-                    bucket_args, steps=steps,
-                )
+                if clock is not None:
+                    # a measured replan may have moved the plan between
+                    # dispatches: refresh the per-round runtime args
+                    deadline = jnp.float32(self.coded_head.deadline)
+                    true_params = (
+                        self._true_params
+                        if self._true_params is not None
+                        else self.coded_head.executor.worker_params
+                    )
+                    bucket_args = self._bucket_args()
+                skey = jax.random.fold_in(key, call)
+                if clock is None:
+                    cache, logits, pos, _ = self._serve_step_fn(
+                        self.params, cache, logits, pos, prompts, lengths,
+                        rows, jnp.asarray(active), skey, deadline,
+                        true_params, bucket_args, steps=steps,
+                    )
+                else:
+                    timing = clock.measure(
+                        lambda: self._serve_step_fn(
+                            self.params, cache, logits, pos, prompts,
+                            lengths, rows, jnp.asarray(active), skey,
+                            deadline, true_params, bucket_args,
+                            steps=steps,
+                        ),
+                        key=skey,
+                        true_cluster=self._true_cluster,
+                    )
+                    cache, logits, pos, _ = timing.result
+                    if controller is not None:
+                        d = controller.observe_timing(timing)
+                        if (
+                            d is not None and d.replanned
+                            and self.coded_head
+                                .executor.last_replan_structural
+                        ):
+                            # next dispatch retraces the re-jitted
+                            # program: compile, not round latency
+                            clock.discard_next()
                 call += 1
                 if placed:  # the fused admit pass costs its own round
                     now += 1.0

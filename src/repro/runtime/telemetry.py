@@ -47,8 +47,14 @@ class Telemetry:
 
     def log(self, step: int, metrics: dict, tokens_per_step: int | None = None):
         rec = {"step": step, **{k: float(v) for k, v in metrics.items()}}
-        if self.step_time and tokens_per_step:
-            rec["tokens_per_s"] = tokens_per_step / self.step_time
+        # explicit None checks: truthiness would silently drop tokens_per_s
+        # when tokens_per_step == 0 (a valid rate of 0.0) or when the
+        # smoothed step time is exactly 0.0 (report inf, not nothing)
+        if self.step_time is not None and tokens_per_step is not None:
+            rec["tokens_per_s"] = (
+                tokens_per_step / self.step_time
+                if self.step_time > 0 else float("inf")
+            )
         self._write(rec)
         return rec
 

@@ -1,0 +1,262 @@
+"""RoundClock: wall-clock round timing for the measured-reality loop (§12).
+
+Every closed loop before this module fed the ``AdaptiveController``
+*simulated* round times (``observe_truth`` samples the scenario layer's
+ground-truth parameters); deployments therefore adapted to what the
+simulator said, never to what the hardware did. ``RoundClock`` makes
+measured time the first-class observation:
+
+* **measure** — each compiled dispatch (the coded train step, a serve
+  round) is wrapped in ``perf_counter`` + ``block_until_ready``, so the
+  measured ``dispatch_s`` is the real device round, not the async
+  dispatch stub;
+* **decompose** — one wall-clock number cannot feed a per-group MLE, so
+  the clock splits it into per-worker round times using the in-program
+  finish-mask/latency draw the executor already exposes
+  (``CodedRoundExecutor.round_observation`` — the SAME sampler, and with
+  the same key the SAME draw, the compiled step's finish mask came
+  from): worker ``w`` gets ``v_w * dispatch_s / max(v)``. What is
+  *measured* is the round total (and any per-worker pad, below); the
+  per-worker *split* is derived — DESIGN.md §12 spells out which is
+  which;
+* **calibrate** — the first fed round pins ``unit_s`` (wall seconds per
+  virtual-time unit) and every observation is reported in
+  virtual-commensurate units (``scale = (dispatch_s / max(v)) /
+  unit_s``). This is a fixed change of units, not an estimate: plans,
+  deadlines and scenario ground-truth injection all live in the
+  planner's virtual units, and a calibrated feed keeps measured
+  observations commensurate with them while real slowdowns still arrive
+  at full magnitude (a 2x wall-clock round is a 2x observation);
+* **guard rails** — the first ``warmup`` rounds are timed but not fed
+  (the first dispatch of a compiled program pays its trace+compile,
+  which would poison the calibration), ``discard_next`` lets a consumer
+  flag a known recompile (post-replan), and a dispatch slower than
+  ``outlier_factor`` times the smoothed round is dropped automatically
+  (GC pause, CI neighbor); every round — fed or skipped — is emitted as
+  a ``round_timing`` telemetry event (§8);
+* **pad injection** — ``pad_s`` (per-worker seconds) really sleeps
+  ``max(pad_s)`` inside the measured window and attributes each
+  worker's share of the measured sleep to that worker: the single-
+  process stand-in for per-worker RPC timestamps, and the fault
+  injector the measured-adaptation tests use (a sleep-padded worker
+  group must trigger a replan from wall-clock evidence alone).
+
+For CommDelay schemes the per-worker upload shifts are scaled by the
+same factor and handed to the controller as measured transfer shares,
+so the bandwidth MLE and the comm-term subtraction keep working on the
+measured path. Feed the result to
+``AdaptiveController.observe_timing`` (or read ``.times`` directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.runtime_model import ClusterSpec, LatencyModel
+
+
+@dataclasses.dataclass
+class RoundTiming:
+    """One measured round: wall-clock facts + the derived decomposition.
+
+    ``times`` is ``None`` when the round was measured but not fed
+    (warmup / outlier / flagged recompile — see ``skipped``);
+    ``observe_timing`` treats that as a no-op, so callers can feed every
+    timing unconditionally.
+    """
+
+    round: int
+    result: Any  # the dispatch's own return value (already blocked on)
+    wall_s: float  # measured: dispatch + injected pad
+    dispatch_s: float  # measured: dispatch + block_until_ready only
+    pad_wall_s: float  # measured: the injected sleep actually slept
+    scale: float  # this round's common factor, in calibrated units
+    times: np.ndarray | None  # (W,) derived per-worker round times
+    transfer_times: np.ndarray | None  # (W,) derived upload shares (comm)
+    payload: float  # bandwidth-MLE payload matching transfer_times
+    membership: tuple[int, ...] | None  # registration counts (truth feed)
+    skipped: str | None  # None = fed; "warmup" | "outlier" | custom
+
+
+class RoundClock:
+    """Measured round times for one executor's dispatches.
+
+    One clock per control loop: it owns the unit calibration and the
+    outlier state, so interleaving two measured loops through one clock
+    would corrupt both. ``pad_s`` may be set (or re-set) at any time
+    between rounds — tests flip it mid-run to inject a slowdown.
+    """
+
+    def __init__(
+        self,
+        executor,
+        *,
+        telemetry=None,
+        pad_s: Sequence[float] | np.ndarray | None = None,
+        warmup: int = 1,
+        outlier_factor: float = 50.0,
+        smooth: float = 0.7,
+    ):
+        if warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {warmup}")
+        if outlier_factor <= 1:
+            raise ValueError(
+                f"outlier_factor must be > 1, got {outlier_factor}"
+            )
+        if not 0 <= smooth < 1:
+            raise ValueError(f"smooth must be in [0, 1), got {smooth}")
+        self.executor = executor
+        self.telemetry = telemetry
+        self.pad_s = pad_s
+        self.warmup = int(warmup)
+        self.outlier_factor = float(outlier_factor)
+        self.smooth = float(smooth)
+        #: wall seconds per virtual-time unit; pinned on the first fed
+        #: round and FROZEN (a units choice, not a tracked estimate)
+        self.unit_s: float | None = None
+        self.rounds = 0  # measured rounds (fed or not)
+        self.fed = 0  # rounds that produced an observation
+        self._smoothed: float | None = None  # EMA of non-outlier dispatches
+        self._discard: str | None = None
+
+    def discard_next(self, reason: str = "recompile") -> None:
+        """Flag the next dispatch as not-an-observation (e.g. a replan
+        recompile: its wall time is compile, not round latency)."""
+        self._discard = reason
+
+    # ------------------------------------------------------------ measure
+    def measure(
+        self,
+        dispatch: Callable[[], Any],
+        *,
+        key,
+        true_cluster: ClusterSpec | None = None,
+    ) -> RoundTiming:
+        """Run one compiled dispatch under the clock and decompose it.
+
+        ``key`` must be the round's straggler-sampling key (the one the
+        dispatched program folded its finish mask from) so the derived
+        per-worker split matches the draw that actually gated the round;
+        ``true_cluster`` is the scenario layer's ground truth when one
+        is being injected (leavers decompose to ``inf`` — never
+        responded).
+        """
+        pad = None if self.pad_s is None else np.asarray(self.pad_s, float)
+        t0 = time.perf_counter()
+        result = dispatch()
+        jax.block_until_ready(result)
+        t1 = time.perf_counter()
+        dispatch_s = t1 - t0
+        pad_wall = 0.0
+        pad_share = None
+        if pad is not None and float(pad.max()) > 0:
+            # padded workers run concurrently: the slowest pad gates the
+            # round; each worker is attributed its share of the sleep
+            # that was actually measured (not the nominal request)
+            time.sleep(float(pad.max()))
+            pad_wall = time.perf_counter() - t1
+            pad_share = pad / float(pad.max()) * pad_wall
+        wall = time.perf_counter() - t0
+        self.rounds += 1
+
+        skipped = None
+        if self._discard is not None:
+            skipped, self._discard = self._discard, None
+        elif self.rounds <= self.warmup:
+            skipped = "warmup"
+        elif (
+            self._smoothed is not None
+            and dispatch_s > self.outlier_factor * self._smoothed
+        ):
+            skipped = "outlier"
+        if skipped is None:
+            self._smoothed = (
+                dispatch_s if self._smoothed is None
+                else self.smooth * self._smoothed
+                + (1 - self.smooth) * dispatch_s
+            )
+
+        times = transfer = None
+        scale = float("nan")
+        payload = 1.0
+        membership = (
+            tuple(g.num_workers for g in true_cluster.groups)
+            if true_cluster is not None else None
+        )
+        if skipped is None:
+            times, transfer, payload, scale = self._decompose(
+                key, true_cluster, dispatch_s, pad_share
+            )
+            self.fed += 1
+        timing = RoundTiming(
+            round=self.rounds,
+            result=result,
+            wall_s=wall,
+            dispatch_s=dispatch_s,
+            pad_wall_s=pad_wall,
+            scale=scale,
+            times=times,
+            transfer_times=transfer,
+            payload=payload,
+            membership=membership,
+            skipped=skipped,
+        )
+        self._emit(timing)
+        return timing
+
+    def _decompose(self, key, true_cluster, dispatch_s, pad_share):
+        """(W,) per-worker observation from one measured dispatch."""
+        v, shifts = self.executor.round_observation(key, true_cluster)
+        finite = np.isfinite(v)
+        if not finite.any():
+            # every planned worker has left: all-miss observation (the
+            # tracker's failure detection needs the infs), no new scale
+            return np.full(v.shape, np.inf), None, 1.0, float("nan")
+        sec_per_v = dispatch_s / float(v[finite].max())
+        if self.unit_s is None:
+            self.unit_s = sec_per_v  # calibration: this round reads 1.0
+        scale = sec_per_v / self.unit_s
+        times = np.where(finite, v * scale, np.inf)
+        if pad_share is not None:
+            times = np.where(finite, times + pad_share / self.unit_s, times)
+        transfer, payload = None, 1.0
+        sch = self.executor.scheme
+        if (
+            sch.latency_model is LatencyModel.COMM_DELAY
+            and getattr(sch, "upload", 0.0) > 0
+        ):
+            transfer = np.where(np.isfinite(shifts), shifts * scale, np.inf)
+            payload = float(sch.upload)
+        return times, transfer, payload, scale
+
+    def _emit(self, t: RoundTiming) -> None:
+        if self.telemetry is None:
+            return
+        finite = (
+            t.times[np.isfinite(t.times)] if t.times is not None else None
+        )
+        self.telemetry.event(
+            "round_timing",
+            round=t.round,
+            wall_s=float(t.wall_s),
+            dispatch_s=float(t.dispatch_s),
+            pad_wall_s=float(t.pad_wall_s),
+            # NaN (skipped rounds) is not valid strict JSON -> null
+            scale=float(t.scale) if np.isfinite(t.scale) else None,
+            unit_s=float(self.unit_s) if self.unit_s is not None else None,
+            workers=int(self.executor.num_workers),
+            fed=t.skipped is None,
+            skipped=t.skipped,
+            t_max=(
+                float(finite.max())
+                if finite is not None and finite.size else None
+            ),
+            t_mean=(
+                float(finite.mean())
+                if finite is not None and finite.size else None
+            ),
+        )

@@ -133,6 +133,11 @@ class TrainConfig:
     adapt_threshold: float = 0.05
     #: modeled cost of one replan (recompile), in round-latency units
     adapt_replan_cost: float = 0.0
+    #: adapt from MEASURED wall-clock round times instead of simulated
+    #: ground truth: each coded dispatch runs under a ``RoundClock``
+    #: (perf_counter + block_until_ready, decomposed per worker, §12)
+    #: and the controller ingests the timings via ``observe_timing``
+    measure_times: bool = False
     # ---- plan bucketing (DESIGN.md §11) ----
     #: quantize integer loads to this multiple and replan via an
     #: in-program bucket switch; None = off (every replan recompiles)
@@ -325,9 +330,11 @@ class Trainer:
             self.partitions = int(k)
         if cfg.cluster is None and (
             cfg.scenario is not None or cfg.adapt_every is not None
+            or cfg.measure_times
         ):
             raise ValueError(
-                "scenario / adapt_every require coded training (cfg.cluster)"
+                "scenario / adapt_every / measure_times require coded "
+                "training (cfg.cluster)"
             )
         if cfg.adapt_every is not None and cfg.adapt_every <= 0:
             raise ValueError(
@@ -339,6 +346,7 @@ class Trainer:
         )
         self.controller = None
         self.trace = None
+        self.clock = None
         if cfg.cluster is not None:
             self.executor = CodedRoundExecutor(
                 cfg.cluster,
@@ -378,6 +386,12 @@ class Trainer:
                     ),
                     telemetry=self.telemetry,
                     on_replan=self._on_replan,
+                )
+            if cfg.measure_times:
+                from repro.runtime.timing import RoundClock
+
+                self.clock = RoundClock(
+                    self.executor, telemetry=self.telemetry
                 )
         else:
             self.step_fn = make_train_step(model, opt_cfg)
@@ -484,20 +498,51 @@ class Trainer:
                     self.executor.bucket_args()
                     if self.executor.buckets is not None else None
                 )
-                params, opt_state, metrics = self.coded_step_fn(
-                    params, opt_state, batch, skey,
-                    jnp.float32(self.executor.deadline),
-                    true_params, bucket_args,
-                )
-                if self.controller is not None:
-                    # the controller observes the SAME per-worker times
-                    # the compiled step's finish mask was drawn from
-                    # (same key, same sampler) — a true closed loop
-                    self.controller.observe_truth(
-                        skey,
-                        self.trace.at(step)
-                        if self.trace is not None else None,
+                if self.clock is not None:
+                    # measured-reality path (§12): the dispatch runs
+                    # under the clock (perf_counter + block_until_ready)
+                    # and the controller ingests the DECOMPOSED
+                    # wall-clock times — same key as the compiled step's
+                    # finish mask, so the split matches the draw that
+                    # actually gated the round
+                    timing = self.clock.measure(
+                        lambda: self.coded_step_fn(
+                            params, opt_state, batch, skey,
+                            jnp.float32(self.executor.deadline),
+                            true_params, bucket_args,
+                        ),
+                        key=skey,
+                        true_cluster=(
+                            self.trace.at(step)
+                            if self.trace is not None else None
+                        ),
                     )
+                    params, opt_state, metrics = timing.result
+                    if self.controller is not None:
+                        d = self.controller.observe_timing(timing)
+                        if (
+                            d is not None and d.replanned
+                            and self.executor.last_replan_structural
+                        ):
+                            # the next dispatch retraces the rebuilt
+                            # step: compile time, not round latency
+                            self.clock.discard_next()
+                else:
+                    params, opt_state, metrics = self.coded_step_fn(
+                        params, opt_state, batch, skey,
+                        jnp.float32(self.executor.deadline),
+                        true_params, bucket_args,
+                    )
+                    if self.controller is not None:
+                        # the controller observes the SAME per-worker
+                        # times the compiled step's finish mask was
+                        # drawn from (same key, same sampler) — a true
+                        # closed loop
+                        self.controller.observe_truth(
+                            skey,
+                            self.trace.at(step)
+                            if self.trace is not None else None,
+                        )
             else:
                 params, opt_state, metrics = self.step_fn(
                     params, opt_state, batch
