@@ -16,11 +16,14 @@ Two metric classes, because shared CI runners are not the machine that
 wrote the golden:
 
 * **ratio metrics** (always enforced) — jit/legacy tokens-per-second
-  speedup and numpy/jit per-round decode-latency speedup. Both paths
-  run on the same machine in the same process, so machine speed divides
-  out; a drop means the *architecture* regressed (e.g. a host sync
-  sneaking into the compiled pipeline), which is exactly what a perf
-  gate exists to catch.
+  speedup, numpy/jit per-round decode-latency speedup, the PER-PHASE
+  ratios (batched prefill vs per-token decode vs erasure solve), and
+  the paged/dense serving tokens-per-second ratio. All sides of every
+  ratio run on the same machine in the same process, so machine speed
+  divides out; a drop means the *architecture* regressed (e.g. a host
+  sync sneaking into the compiled pipeline, or prefill falling back to
+  the sequential scan), which is exactly what a perf gate exists to
+  catch.
 * **absolute metrics** (warn-only unless ``--absolute``) — raw jit
   tokens/s and per-round decode seconds. Meaningful on a stable
   dedicated runner; noise on shared hardware, hence the flag.
@@ -44,10 +47,20 @@ from repro.runtime.telemetry import Telemetry
 
 GOLDEN = "serve_throughput"
 
-#: (name, path into the record, higher-is-better) — enforced ratios
+#: (name, path into the record, higher-is-better) — enforced ratios.
+#: The per-phase rows gate each serving phase separately: a regression
+#: confined to prefill (e.g. losing the batched splice) or to the
+#: erasure solve moves its own ratio even when end-to-end tokens/s
+#: hides it behind the other phases.
 RATIO_METRICS = (
     ("speedup_tokens_per_s", ("speedup_tokens_per_s",), True),
     ("decode_speedup", ("decode_latency_s", "speedup"), True),
+    ("prefill_per_decode_token",
+     ("phases", "prefill_per_decode_token"), False),
+    ("erasure_share_of_decode",
+     ("phases", "erasure_share_of_decode"), False),
+    ("paged_over_dense_tokens_per_s",
+     ("paged", "tokens_per_s_ratio"), True),
 )
 #: absolute metrics: machine-dependent, warn-only without --absolute
 ABS_METRICS = (

@@ -28,6 +28,15 @@ trace (arrivals beyond fleet capacity — the queue must shed and keep
 the p99 of what it admits bounded). Gates are asserted in BOTH modes
 (the CI fast lane runs ``--reduced``); results land in
 ``artifacts/bench/serve_frontend.json``.
+
+``--paged`` runs the paged-KV A/B instead (DESIGN.md §13): the same
+chat trace plus one long-tail prompt served from the block-pooled cache
+with chunked prefill vs the dense per-slot cache, gating that paged
+serving (a) matches or beats dense tokens/s, (b) holds >= 4x less KV
+memory than dense's worst-case cache, and (c) admits every prompt
+length through ONE compiled program — zero retraces in the timed runs,
+long prompts included (dense must size every slot for the longest
+prompt; paged pays per 16-token block actually referenced).
 """
 from __future__ import annotations
 
@@ -43,7 +52,7 @@ from repro.configs import get_arch
 from repro.core.runtime_model import ClusterSpec
 from repro.models.model import Model
 from repro.runtime.serve_loop import ServeConfig, Server
-from repro.serve import make_workload
+from repro.serve import Request, make_workload
 
 KEY = jax.random.PRNGKey(0)
 
@@ -92,6 +101,156 @@ def _sequential(server, trace, prompt_cap, max_out):
             latencies.append(now - req.arrival)
     wall = time.perf_counter() - t0
     return tokens, wall, np.asarray(latencies)
+
+
+#: paged A/B geometry: 8 slots, 16-token blocks, admission chunk = one
+#: block row — the long-tail prompt spans 15 chunks
+PAGED_SLOTS = 8
+BLOCK_LEN = 16
+PREFILL_CHUNK = 16
+LONG_PROMPT = 240
+KV_BYTES_GATE = 4.0
+
+
+def paged_dense_ab(reduced: bool = True, repeats: int = 3,
+                   assert_gates: bool = True) -> dict:
+    """Paged vs dense serving A/B on chat + one long-tail prompt.
+
+    Returns a record with both paths' tokens/s, the paged/dense ratio,
+    the KV-memory ratio (dense worst-case slot cache bytes over the
+    paged pool bytes, both from real ``.nbytes``), and the retrace
+    counts of the timed runs. Reused by ``benchmarks/serve_throughput``
+    so the perf gate can hold a paged/dense tokens-per-second golden.
+    """
+    config = get_arch("qwen3-0.6b").reduced()
+    model = Model(config)
+    params = model.init_params(KEY)
+
+    n_req = 10 if reduced else 20
+    wl = make_workload(
+        "chat", num_requests=n_req, prompt_len=(8, 16),
+        vocab=config.vocab_size,
+    )
+    trace = list(wl.trace(seed=0))
+    # the long-tail request: one prompt far past the admission chunk —
+    # dense must size EVERY slot's cache for it; paged prefills it over
+    # LONG_PROMPT / PREFILL_CHUNK admit rounds of the same program
+    rng = np.random.RandomState(7)
+    long_arrival = trace[len(trace) // 2].arrival
+    trace.append(Request(
+        rid=n_req, arrival=long_arrival,
+        prompt=tuple(int(t) for t in rng.randint(1, config.vocab_size,
+                                                 LONG_PROMPT)),
+        out_len=8, deadline_class="batch",
+    ))
+    prompt_cap = max(r.prompt_len for r in trace)
+    max_out = max(r.out_len for r in trace)
+    cache_len = prompt_cap + max_out + 1
+    # pool: the long request's full reservation + three concurrent chat
+    # requests' worth — transient pressure queues, nothing can deadlock
+    need_long = -(-(LONG_PROMPT + 8 + 1) // BLOCK_LEN)
+    need_chat = -(-(16 + max_out + 1) // BLOCK_LEN)
+    num_blocks = need_long + 3 * need_chat
+
+    serve_kw = dict(
+        slots=PAGED_SLOTS, decode_block=DECODE_BLOCK,
+        prompt_cap=prompt_cap, max_out=max_out,
+        queue_cap=10 * n_req, admission_threshold=1e-3,
+    )
+    dense_kw = dict(serve_kw, paged=False)
+    paged_kw = dict(
+        serve_kw, paged=True, block_len=BLOCK_LEN,
+        num_blocks=num_blocks, prefill_chunk=PREFILL_CHUNK,
+    )
+    server = Server(model, params, FLEET, ServeConfig(block_rows=64))
+    server.serve(trace, **dense_kw)  # warmup / compile
+    server.serve(trace, **paged_kw)
+    traces_after_warmup = server.serve_traces
+    dense_runs, paged_runs = [], []
+    for _ in range(repeats):
+        dense_runs.append(server.serve(trace, **dense_kw))
+        paged_runs.append(server.serve(trace, **paged_kw))
+    retraces = server.serve_traces - traces_after_warmup
+    dense = min(dense_runs, key=lambda r: r.wall_s)
+    paged = min(paged_runs, key=lambda r: r.wall_s)
+    for name, rep in [("dense", dense), ("paged", paged)]:
+        assert rep.shed == 0 and rep.admitted == len(trace), (
+            f"{name} A/B run must serve the full trace "
+            f"(admitted {rep.admitted}, shed {rep.shed})"
+        )
+    assert paged.tokens == dense.tokens, "paths must serve identical work"
+    long_fin = [f for f in paged.finished if f.request.rid == n_req]
+    assert long_fin and long_fin[0].outcome == "done", (
+        "the long-tail prompt must be admitted and finished via chunked "
+        "prefill"
+    )
+
+    dense_cache = model.init_slot_cache(PAGED_SLOTS, cache_len)
+    paged_cache = model.init_paged_cache(num_blocks, BLOCK_LEN)
+    nbytes = lambda c: sum(
+        int(t.nbytes) for t in (c["kv"]["k"], c["kv"]["v"])
+    )
+    dense_bytes, paged_bytes = nbytes(dense_cache), nbytes(paged_cache)
+    kv_ratio = dense_bytes / paged_bytes
+    tok_ratio = paged.tokens_per_s / dense.tokens_per_s
+
+    record = {
+        "slots": PAGED_SLOTS,
+        "block_len": BLOCK_LEN,
+        "num_blocks": num_blocks,
+        "prefill_chunk": PREFILL_CHUNK,
+        "long_prompt": LONG_PROMPT,
+        "prompt_cap": prompt_cap,
+        "num_requests": len(trace),
+        "dense": {"tokens": dense.tokens, "wall_s": dense.wall_s,
+                  "tokens_per_s": dense.tokens_per_s,
+                  "prefill_rounds": dense.prefill_rounds,
+                  "kv_bytes": dense_bytes},
+        "paged": {"tokens": paged.tokens, "wall_s": paged.wall_s,
+                  "tokens_per_s": paged.tokens_per_s,
+                  "prefill_rounds": paged.prefill_rounds,
+                  "kv_bytes": paged_bytes},
+        "tokens_per_s_ratio": tok_ratio,
+        "kv_bytes_ratio": kv_ratio,
+        "timed_retraces": retraces,
+    }
+    if assert_gates:
+        assert tok_ratio >= 1.0, (
+            f"paged serving must match or beat dense tokens/s, got "
+            f"{tok_ratio:.2f}x"
+        )
+        assert kv_ratio >= KV_BYTES_GATE, (
+            f"paged pool must hold >= {KV_BYTES_GATE}x less KV than the "
+            f"dense worst-case cache, got {kv_ratio:.2f}x"
+        )
+        assert retraces == 0, (
+            f"timed serve runs must not retrace (mixed prompt lengths "
+            f"ride one compiled program), got {retraces}"
+        )
+    return record
+
+
+def run_paged(reduced: bool = False):
+    """CLI entry for the paged A/B: run, print, save, gate."""
+    record = paged_dense_ab(reduced=reduced, assert_gates=True)
+    rows = [
+        {"path": p, **{k: record[p][k]
+                       for k in ("tokens_per_s", "prefill_rounds",
+                                 "kv_bytes")}}
+        for p in ("dense", "paged")
+    ]
+    path = save("serve_paged", record)
+    print(table(rows, ["path", "tokens_per_s", "prefill_rounds",
+                       "kv_bytes"]))
+    print(f"paged / dense tokens/s: {record['tokens_per_s_ratio']:.2f}x "
+          f"(gate >= 1.0x)")
+    print(f"dense / paged KV bytes: {record['kv_bytes_ratio']:.2f}x "
+          f"(gate >= {KV_BYTES_GATE}x)")
+    print(f"timed-run retraces: {record['timed_retraces']} (gate == 0); "
+          f"long prompt of {record['long_prompt']} tokens chunk-prefilled "
+          f"at {record['prefill_chunk']}/round")
+    print(f"wrote {path}")
+    return record
 
 
 def run(reduced: bool = False):
@@ -224,8 +383,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
                     help="smaller trace for the CI fast lane")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV vs dense slot-cache A/B (chat trace + "
+                         "long-tail prompt) instead of continuous vs "
+                         "sequential")
     args = ap.parse_args()
-    run(reduced=args.reduced)
+    if args.paged:
+        run_paged(reduced=args.reduced)
+    else:
+        run(reduced=args.reduced)
 
 
 if __name__ == "__main__":

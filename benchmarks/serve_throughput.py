@@ -13,7 +13,11 @@ both paths on CPU:
   solved on-device.
 
 Also times the erasure decode alone (numpy oracle vs jitted fixed-shape
-decode) for a per-token decode-latency number, and writes
+decode) for a per-token decode-latency number, breaks the jit pipeline
+into per-phase timings (batched prefill vs per-token decode vs erasure
+solve — the ratios ``benchmarks/perf_gate.py`` gates separately), runs
+the paged/dense serving A/B (``benchmarks.serve_frontend``) for the
+paged tokens-per-second ratio golden, and writes
 ``artifacts/bench/serve_throughput.json`` — the serving-path companion to
 the paper-figure latency benchmarks.
 """
@@ -107,6 +111,38 @@ def run(batch=4, prompt_len=16, max_new=32, runs=3):
     products = head.worker_products(h)
     t_np, t_jit = _time_decode(head, products)
 
+    # per-phase split of the jit pipeline: the batched prefill is timed
+    # alone (the same ``_prefill_into_cache`` program the compiled
+    # generate runs), the decode share is what remains of a generate
+    # call, and the erasure solve is the scanned jit decode above. The
+    # RATIOS between phases are same-process and machine-invariant —
+    # perf_gate enforces them so one phase cannot silently eat the
+    # others' budget (a prefill falling back to the sequential scan
+    # multiplies prefill_per_decode_token ~prompt_len-fold).
+    srv = modes["jit"]["server"]
+    cache0 = model.init_cache(batch, prompt_len + max_new)
+    jax.block_until_ready(srv._prefill_fn(params, cache0, prompts)[0])
+    t0 = time.perf_counter()
+    for _ in range(runs):
+        jax.block_until_ready(srv._prefill_fn(params, cache0, prompts)[0])
+    prefill_s = (time.perf_counter() - t0) / runs
+    decode_per_token_s = max(
+        (modes["jit"]["generate_s"] - prefill_s) / max_new, 1e-12
+    )
+    phases = {
+        "prefill_s": prefill_s,
+        "decode_per_token_s": decode_per_token_s,
+        "erasure_solve_s": t_jit,
+        "prefill_per_decode_token": prefill_s / decode_per_token_s,
+        "erasure_share_of_decode": t_jit / decode_per_token_s,
+    }
+
+    # paged/dense serving A/B (ratio golden for the perf gate)
+    from benchmarks.serve_frontend import paged_dense_ab
+
+    paged = paged_dense_ab(reduced=True, repeats=max(runs, 2),
+                           assert_gates=False)
+
     speedup = modes["jit"]["tokens_per_s"] / modes["legacy"]["tokens_per_s"]
     record = {
         "arch": "qwen3-0.6b (reduced)",
@@ -122,12 +158,22 @@ def run(batch=4, prompt_len=16, max_new=32, runs=3):
         "speedup_tokens_per_s": speedup,
         "decode_latency_s": {"numpy": t_np, "jit": t_jit,
                              "speedup": t_np / t_jit},
+        "phases": phases,
+        "paged": paged,
     }
     path = save("serve_throughput", record)
     print(table(rows, ["path", "tokens_per_s", "generate_s"]))
     print(f"tokens/s speedup (jit / legacy): {speedup:.2f}x")
     print(f"per-round decode: numpy {t_np * 1e3:.3f} ms "
           f"vs jit {t_jit * 1e3:.3f} ms ({t_np / t_jit:.2f}x)")
+    print(f"phases: prefill {prefill_s * 1e3:.3f} ms "
+          f"({phases['prefill_per_decode_token']:.2f} decode tokens), "
+          f"decode/token {decode_per_token_s * 1e3:.3f} ms, "
+          f"erasure solve {t_jit * 1e3:.3f} ms "
+          f"({phases['erasure_share_of_decode']:.2f} of a decode token)")
+    print(f"paged / dense serve tokens/s: "
+          f"{paged['tokens_per_s_ratio']:.2f}x "
+          f"(KV bytes {paged['kv_bytes_ratio']:.2f}x smaller)")
     print(f"wrote {path}")
     assert speedup > 1.0, "jit pipeline must beat the legacy numpy path"
     return record

@@ -1,0 +1,25 @@
+from repro.kernels.paged_attention.ops import (
+    gather_kv,
+    paged_chunk_attend,
+    paged_decode_attend,
+    paged_decode_attend_kernel,
+    scatter_chunk,
+    scatter_decode,
+    valid_mask,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_chunk_attend_ref,
+    paged_decode_attend_ref,
+)
+
+__all__ = [
+    "gather_kv",
+    "paged_chunk_attend",
+    "paged_decode_attend",
+    "paged_decode_attend_kernel",
+    "scatter_chunk",
+    "scatter_decode",
+    "valid_mask",
+    "paged_chunk_attend_ref",
+    "paged_decode_attend_ref",
+]

@@ -1,0 +1,84 @@
+"""Pure-numpy oracle for the paged-attention kernel family.
+
+Reference semantics for the block-pooled KV cache (DESIGN.md §13): each
+slot ``s`` owns an ordered list of physical blocks ``table[s]`` (−1 =
+unallocated); logical token ``j`` of slot ``s`` lives at physical block
+``table[s, j // block_len]``, offset ``j % block_len``. A KV entry is
+attendable iff its block is allocated and ``j <= q_pos`` (causal).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def gather_ref(pool, table):
+    """(NBp, BL, KV, hd), (S, MB) -> (S, MB*BL, KV, hd) logical view.
+
+    Unallocated table entries gather the sink block (last physical
+    block); callers mask them out via ``valid_ref``.
+    """
+    pool = np.asarray(pool)
+    table = np.asarray(table)
+    sink = pool.shape[0] - 1
+    phys = np.where(table >= 0, table, sink)
+    s, mb = table.shape
+    bl = pool.shape[1]
+    return pool[phys].reshape(s, mb * bl, *pool.shape[2:])
+
+
+def valid_ref(table, block_len, q_pos):
+    """(S, MB), BL, (S,) -> (S, MB*BL) bool attendable-entry mask."""
+    table = np.asarray(table)
+    q_pos = np.asarray(q_pos)
+    alloc = np.repeat(table >= 0, block_len, axis=1)  # (S, MB*BL)
+    j = np.arange(alloc.shape[1])
+    return alloc & (j[None, :] <= q_pos[:, None])
+
+
+def paged_decode_attend_ref(q, k_pool, v_pool, table, pos):
+    """Single-query paged attention, f32 softmax.
+
+    q: (S, KV, G, hd) post-rope queries; pools: (NBp, BL, KV, hd);
+    table: (S, MB) int; pos: (S,) per-slot write positions (entry ``pos``
+    already written). Returns (S, KV, G, hd).
+    """
+    q = np.asarray(q, np.float32)
+    k = gather_ref(k_pool, table).astype(np.float32)
+    v = gather_ref(v_pool, table).astype(np.float32)
+    bl = np.asarray(k_pool).shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    sc = np.einsum("bkgh,bskh->bkgs", q, k) * scale
+    valid = valid_ref(table, bl, pos)
+    sc = np.where(valid[:, None, None, :], sc, NEG_INF)
+    sc = sc - sc.max(axis=-1, keepdims=True)
+    w = np.exp(sc)
+    w = w / np.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return np.einsum("bkgs,bskh->bkgh", w, v)
+
+
+def paged_chunk_attend_ref(q, k_pool, v_pool, table, q_pos):
+    """Chunked-prefill paged attention: C queries per slot.
+
+    q: (S, C, KV, G, hd); q_pos: (S, C) absolute query positions. Every
+    query attends the slot's full gathered history up to itself
+    (cross-chunk history and in-chunk causality share one mask).
+    Returns (S, C, KV, G, hd).
+    """
+    q = np.asarray(q, np.float32)
+    k = gather_ref(k_pool, table).astype(np.float32)
+    v = gather_ref(v_pool, table).astype(np.float32)
+    bl = np.asarray(k_pool).shape[1]
+    q_pos = np.asarray(q_pos)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    sc = np.einsum("bqkgh,bskh->bkgqs", q, k) * scale  # (S, KV, G, C, L)
+    alloc = np.repeat(np.asarray(table) >= 0, bl, axis=1)  # (S, L)
+    j = np.arange(alloc.shape[1])
+    valid = alloc[:, None, :] & (j[None, None, :] <= q_pos[:, :, None])
+    sc = np.where(valid[:, None, None, :, :], sc, NEG_INF)
+    sc = sc - sc.max(axis=-1, keepdims=True)
+    w = np.exp(sc)
+    w = w / np.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    out = np.einsum("bkgqs,bskh->bkgqh", w, v)
+    return out.transpose(0, 3, 1, 2, 4)  # (S, C, KV, G, hd)

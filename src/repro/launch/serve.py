@@ -87,8 +87,25 @@ def main(argv=None):
     ap.add_argument("--num-requests", type=int, default=None,
                     help="trace length for --trace (default: the "
                          "workload preset)")
-    ap.add_argument("--slots", type=int, default=4,
-                    help="in-flight stream slots for --trace")
+    ap.add_argument("--slots", default="4",
+                    help="in-flight stream slots for --trace; 'auto' asks "
+                         "the AdaptiveController for a width from measured "
+                         "round latency (requires --coded)")
+    ap.add_argument("--dense-kv", action="store_true",
+                    help="serve --trace from the dense per-slot KV cache "
+                         "(the parity oracle) instead of the paged block "
+                         "pool (DESIGN.md §13)")
+    ap.add_argument("--block-len", type=int, default=None,
+                    help="tokens per physical KV block for paged --trace "
+                         "serving (default 16)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV block pool size for paged --trace serving "
+                         "(default: sized so the trace never exhausts it; "
+                         "smaller pools shed on memory pressure)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admission chunk width for paged --trace serving: "
+                         "longer prompts prefill across several admit "
+                         "rounds of the same compiled program")
     ap.add_argument("--admission-threshold", type=float, default=1.0,
                     help="admission-control strictness for --trace "
                          "(higher sheds earlier; deadline budgets are "
@@ -122,6 +139,16 @@ def main(argv=None):
     if args.measure_times and args.legacy_decode:
         raise SystemExit("--measure-times times compiled dispatches; "
                          "drop --legacy-decode")
+    if args.slots == "auto":
+        if not args.coded:
+            raise SystemExit("--slots auto derives the width from the coded "
+                             "fleet's round latency; requires --coded")
+    else:
+        try:
+            args.slots = int(args.slots)
+        except ValueError:
+            raise SystemExit(f"--slots must be an int or 'auto', "
+                             f"got {args.slots!r}")
 
     # cold-start compile reuse: every program this process builds
     # (bucket branches included) persists to the on-disk JAX cache
@@ -191,6 +218,17 @@ def _serve_trace(server, args, config):
         num_requests=args.num_requests, vocab=config.vocab_size,
     )
     trace = wl.trace(seed=args.trace_seed)
+    slots = args.slots
+    if slots == "auto":
+        from repro.runtime.control import AdaptiveController
+
+        # width from measured reality: the controller's coverage-latency
+        # view of the fleet (tracker estimates once RoundClock feeds
+        # arrive; the planned latency before any) scales a base of 4
+        controller = AdaptiveController(server.coded_head.executor)
+        slots = controller.recommend_slots(base=4)
+        print(f"slots auto -> {slots} "
+              f"(coverage latency {controller.coverage_latency():.4f})")
     with Telemetry(args.telemetry) as tel:
         clock = None
         if args.measure_times:
@@ -198,9 +236,11 @@ def _serve_trace(server, args, config):
 
             clock = RoundClock(server.coded_head.executor, telemetry=tel)
         rep = server.serve(
-            trace, slots=args.slots,
+            trace, slots=slots,
             admission_threshold=args.admission_threshold,
             telemetry=tel, clock=clock,
+            paged=not args.dense_kv, block_len=args.block_len,
+            num_blocks=args.num_blocks, prefill_chunk=args.prefill_chunk,
         )
     if clock is not None:
         unit = "-" if clock.unit_s is None else f"{clock.unit_s:.3e}"

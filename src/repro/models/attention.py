@@ -325,6 +325,83 @@ def decode_attention(
     return y, new_cache
 
 
+def decode_attention_paged(
+    params, x, cache, table, pos, active, *,
+    num_heads, num_kv_heads, head_dim,
+    use_rope=True, rope_theta=10_000.0, use_kernel=False,
+):
+    """Per-slot decode against a shared KV block pool (DESIGN.md §13).
+
+    Like ``decode_attention_slots`` but the KV state is a fixed pool of
+    physical blocks shared across slots: ``cache`` holds ``{"k", "v"}``
+    of shape (num_blocks + 1, block_len, KV, hd) (last block = write
+    sink), ``table``: (S, max_blocks) maps each slot's logical blocks to
+    pool blocks (−1 = unallocated), ``pos``: (S,) write positions,
+    ``active``: (S,) bool — inactive rows write to the sink so frozen
+    slots can never corrupt reassigned blocks. The attend math mirrors
+    ``decode_attention_slots`` exactly so paged decode logits bit-match
+    the dense oracle under an order-preserving layout.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, x, num_heads, num_kv_heads, head_dim)
+    q, k_new = _maybe_qk_norm(params, q, k_new)
+    if use_rope:
+        p = pos[:, None].astype(jnp.int32)
+        q = rope(q, p, rope_theta)
+        k_new = rope(k_new, p, rope_theta)
+    k_pool, v_pool = paged_ops.scatter_decode(
+        cache["k"], cache["v"], k_new[:, 0], v_new[:, 0], table, pos, active
+    )
+    g = num_heads // num_kv_heads
+    qr = q.reshape(b, num_kv_heads, g, head_dim)
+    if use_kernel:
+        out = paged_ops.paged_decode_attend_kernel(
+            qr, k_pool, v_pool, table, pos
+        )
+    else:
+        out = paged_ops.paged_decode_attend(qr, k_pool, v_pool, table, pos)
+    out = out.reshape(b, 1, num_heads * head_dim)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def prefill_attention_paged(
+    params, x, cache, table, start, chunk_len, *,
+    num_heads, num_kv_heads, head_dim,
+    use_rope=True, rope_theta=10_000.0,
+):
+    """One chunked-prefill pass of C prompt tokens per slot into the pool.
+
+    x: (S, C, D) chunk embeddings; chunk row ``i`` of slot ``s`` is the
+    prompt token at absolute position ``start[s] + i`` (rows past
+    ``chunk_len[s]`` are padding — their KV goes to the sink and their
+    outputs are discarded by the caller). KV for the chunk is scattered
+    FIRST, then every query attends the slot's full gathered history up
+    to itself, so cross-chunk context (earlier admit rounds) and
+    in-chunk causality share one mask.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    b, c = x.shape[:2]
+    q, k_new, v_new = _qkv(params, x, x, num_heads, num_kv_heads, head_dim)
+    q, k_new = _maybe_qk_norm(params, q, k_new)
+    p = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (S, C)
+    if use_rope:
+        q = rope(q, p, rope_theta)
+        k_new = rope(k_new, p, rope_theta)
+    k_pool, v_pool = paged_ops.scatter_chunk(
+        cache["k"], cache["v"], k_new, v_new, table, start, chunk_len
+    )
+    g = num_heads // num_kv_heads
+    qr = q.reshape(b, c, num_kv_heads, g, head_dim)
+    out = paged_ops.paged_chunk_attend(qr, k_pool, v_pool, table, p)
+    out = out.reshape(b, c, num_heads * head_dim).astype(x.dtype)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k_pool, "v": v_pool}
+
+
 def decode_attention_slots(
     params, x, cache, pos_map, pos, slot, *,
     num_heads, num_kv_heads, head_dim,

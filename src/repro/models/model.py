@@ -837,6 +837,145 @@ class Model:
             "kv": {**new_kv, "pos": pos_map}
         }
 
+    # --------------------------------------------------- paged KV decode
+    # Paged serving (DESIGN.md §13): physical KV memory is a fixed pool
+    # of (block_len,)-token blocks shared across slots, and each slot
+    # maps logical positions to pool blocks through a block table. The
+    # program's shapes depend only on (num_blocks, block_len, S) — never
+    # on any request's length — so admitting an arbitrarily long prompt
+    # (prefilled chunk-by-chunk across admit rounds) retraces nothing.
+
+    def init_paged_cache(self, num_blocks: int, block_len: int):
+        """KV block pool for ``decode_step_paged``/``prefill_paged``.
+
+        Allocates ``num_blocks + 1`` physical blocks per layer: the last
+        block is the write SINK — inactive/frozen/padded rows scatter
+        there, so a frozen slot can never corrupt a block that was freed
+        and reassigned. No position array: validity is derived from the
+        per-dispatch block tables and positions (runtime arguments).
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        shape = (c.num_layers, num_blocks + 1, block_len, c.num_kv_heads, hd)
+        return {
+            "kv": {
+                "k": jnp.zeros(shape, c.cdtype),
+                "v": jnp.zeros(shape, c.cdtype),
+            }
+        }
+
+    def _paged_stack_apply(self, body, x, blocks, cache):
+        """Scan-or-unroll over layers carrying per-layer pool slices."""
+        layer_kv = {"k": cache["kv"]["k"], "v": cache["kv"]["v"]}
+        if self.config.scan_layers:
+            x, new_kv = jax.lax.scan(body, x, (blocks, layer_kv))
+        else:
+            news = []
+            for i in range(self.config.num_layers):
+                inp = jax.tree.map(lambda t: t[i], (blocks, layer_kv))
+                x, new = body(x, inp)
+                news.append(new)
+            new_kv = jax.tree.map(lambda *ts: jnp.stack(ts), *news)
+        return x, {"kv": new_kv}
+
+    def _paged_block_body(self, attn_fn):
+        """Residual block body around a paged attention fn (dense/moe)."""
+        c = self.config
+        if c.family == "moe":
+            def body(h, inp):
+                p, kv_slice = inp
+                h, new = attn_fn(p, h, kv_slice)
+                h = h + moe_mod.moe_ffn(
+                    p["moe"], L.rmsnorm(p["ln2"], h),
+                    num_experts=c.num_experts, top_k=c.top_k,
+                    capacity_factor=c.capacity_factor,
+                )
+                return h, new
+        else:
+            def body(h, inp):
+                p, kv_slice = inp
+                h, new = attn_fn(p, h, kv_slice)
+                h = h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h))
+                return h, new
+        return body
+
+    def decode_step_paged(self, params, cache, tokens, pos, table, active,
+                          *, use_kernel: bool = False):
+        """One token per slot against the shared block pool.
+
+        tokens: (S,) int32; pos: (S,) write positions; table: (S, MB)
+        block table; active: (S,) bool (inactive rows write to the
+        sink). Returns (logits (S, V_padded), new_cache). The attend
+        math bit-matches ``decode_step_slots`` under an order-preserving
+        block layout.
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        x = L.embed(params["embed"], tokens[:, None], c.cdtype)
+        pos = jnp.asarray(pos, jnp.int32)
+        table = jnp.asarray(table, jnp.int32)
+        active = jnp.asarray(active, bool)
+
+        def attn_fn(p, h, kv_slice):
+            y, new = attn_mod.decode_attention_paged(
+                p["attn"], L.rmsnorm(p["ln1"], h), kv_slice, table, pos,
+                active, num_heads=c.num_heads, num_kv_heads=c.num_kv_heads,
+                head_dim=hd, rope_theta=c.rope_theta, use_kernel=use_kernel,
+            )
+            return h + y, new
+
+        x, new_cache = self._paged_stack_apply(
+            self._paged_block_body(attn_fn), x, params["blocks"], cache
+        )
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.unembed(params["embed"], x, DTYPES_LOGITS[c.logits_dtype])
+        return self._mask_pad_logits(logits[:, 0]), new_cache
+
+    def prefill_paged(self, params, cache, tokens, start, chunk_len, table):
+        """One chunked-prefill admit round: C prompt tokens per slot.
+
+        tokens: (S, C) int32 — row s holds prompt positions
+        ``[start[s], start[s] + chunk_len[s])`` of slot s's request
+        (right-padded; rows with ``chunk_len == 0`` are slots not
+        prefilling this round). KV for the chunk is scattered into the
+        slot's pool blocks, every query attends the slot's full gathered
+        history (earlier chunks included), and the returned logits are
+        taken at each row's last real chunk position — for the chunk
+        that COMPLETES a prompt these are the request's pending first-
+        decode logits, exactly like the dense splice. Returns
+        ``(logits (S, V_padded), new_cache)``.
+        """
+        c = self.config
+        self._check_slot_support()
+        hd = c.resolved_head_dim
+        b, cc = tokens.shape
+        x = L.embed(params["embed"], tokens, c.cdtype)
+        start = jnp.asarray(start, jnp.int32)
+        chunk_len = jnp.asarray(chunk_len, jnp.int32)
+        table = jnp.asarray(table, jnp.int32)
+
+        def attn_fn(p, h, kv_slice):
+            y, new = attn_mod.prefill_attention_paged(
+                p["attn"], L.rmsnorm(p["ln1"], h), kv_slice, table, start,
+                chunk_len, num_heads=c.num_heads,
+                num_kv_heads=c.num_kv_heads, head_dim=hd,
+                rope_theta=c.rope_theta,
+            )
+            return h + y, new
+
+        x, new_cache = self._paged_stack_apply(
+            self._paged_block_body(attn_fn), x, params["blocks"], cache
+        )
+        last = jnp.clip(chunk_len - 1, 0, cc - 1)
+        x_last = x[jnp.arange(b), last][:, None]  # (S, 1, D)
+        x_last = L.rmsnorm(params["final_norm"], x_last)
+        logits = L.unembed(
+            params["embed"], x_last, DTYPES_LOGITS[c.logits_dtype]
+        )[:, 0]
+        return self._mask_pad_logits(logits), new_cache
+
     # --------------------------------------------------------- analytics
     def param_count(self) -> int:
         shapes = jax.eval_shape(

@@ -442,6 +442,36 @@ class AdaptiveController:
             download=float(getattr(sch, "download", 0.0)),
         )
 
+    def recommend_slots(
+        self, *, base: int, lo: int = 1, hi: int | None = None,
+        reference: float | None = None,
+    ) -> int:
+        """Pick the serve batch width from measured round latency.
+
+        ``base`` slots are calibrated for ``reference`` round latency
+        (default: the deployed plan's coverage latency on its OWN
+        cluster — the planned, no-drift value). When the tracker's
+        measured-reality estimates (RoundClock feed via
+        ``observe_timing``) say rounds run ``r``× slower than planned,
+        the recommended in-flight width shrinks to ``base / r`` — fewer
+        concurrent streams keep per-request backlog projections inside
+        their deadline budgets — and grows symmetrically when rounds run
+        fast, clamped to ``[lo, hi]`` (``hi`` defaults to ``4 * base``).
+        """
+        if base <= 0:
+            raise ValueError(f"base must be > 0, got {base}")
+        hi = 4 * base if hi is None else hi
+        if reference is None:
+            reference = self.coverage_latency(self.executor.plan.cluster)
+        cur = self.coverage_latency()
+        if (
+            not np.isfinite(cur) or not np.isfinite(reference)
+            or cur <= 0 or reference <= 0
+        ):
+            return int(min(max(base, lo), hi))
+        rec = int(round(base * reference / cur))
+        return int(min(max(rec, lo), hi))
+
     # ---------------------------------------------------------- decision
     def update(self) -> Decision:
         """Run one decision now (the cadence calls this automatically).

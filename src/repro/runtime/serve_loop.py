@@ -59,6 +59,13 @@ class ServeConfig:
     scheme: str | AllocationScheme = "optimal"  # registry name or object
     use_kernel: bool = False  # Pallas coded-matvec kernel for the block mix
     jit_pipeline: bool = True  # False: legacy per-token host loop (numpy)
+    # paged KV serving (DESIGN.md §13): ``serve`` runs on a block-pooled
+    # cache with chunked prefill; ``paged=False`` keeps the dense
+    # slot-cache path (the bit-parity oracle).
+    paged: bool = True
+    block_len: int = 16  # tokens per physical KV block
+    num_blocks: int | None = None  # pool size; None = dense-equivalent auto
+    prefill_chunk: int | None = None  # admission chunk; None = prompt_cap
     # plan bucketing (DESIGN.md §11): set ``bucket_quantum`` to quantize
     # integer loads onto bucket shapes and replan in-program via a
     # runtime bucket switch — intra-capacity replans then retrace nothing
@@ -342,6 +349,7 @@ class Server:
             else None
         )
         self._decode = jax.jit(model.decode_step)
+        self._prefill_fn = jax.jit(self._prefill_into_cache)
         self.traces = 0
         self.serve_traces = 0
         #: optional ground-truth (mus_w, alphas_w, shift_w) the next
@@ -358,6 +366,10 @@ class Server:
         # can update the KV cache in place instead of copying it per call
         self._serve_step_fn = jax.jit(
             self._serve_step_program, static_argnames=("steps",),
+            donate_argnums=(1, 2, 3),
+        )
+        self._serve_step_paged_fn = jax.jit(
+            self._serve_step_paged_program, static_argnames=("steps",),
             donate_argnums=(1, 2, 3),
         )
 
@@ -413,6 +425,10 @@ class Server:
             self._serve_step_program, static_argnames=("steps",),
             donate_argnums=(1, 2, 3),
         )
+        self._serve_step_paged_fn = jax.jit(
+            self._serve_step_paged_program, static_argnames=("steps",),
+            donate_argnums=(1, 2, 3),
+        )
 
     def _bucket_args(self):
         """Fresh (bucket state, index) runtime args — None when off."""
@@ -422,6 +438,42 @@ class Server:
         return head.executor.bucket_args()
 
     # ------------------------------------------------------- jit pipeline
+    def _can_batch_prefill(self) -> bool:
+        """True when ``Model.prefill`` covers this model (same support
+        envelope as the slot/paged paths)."""
+        c = self.model.config
+        return (
+            c.family in ("dense", "vlm", "moe")
+            and not c.kv_quant
+            and c.sliding_window is None
+        )
+
+    def _prefill_into_cache(self, params, cache, prompts):
+        """Batched prefill spliced into an ``init_cache`` decode state.
+
+        The generate-path counterpart of the serve splice: ONE
+        ``Model.prefill`` pass computes every layer's prompt K/V and the
+        last-position logits, which land in cache positions
+        ``[0, s0)`` / the shared position map. Traceable — used inline by
+        ``_gen_program`` and jitted standalone by the legacy host loop.
+        """
+        b, s0 = prompts.shape
+        logits, ks, vs = self.model.prefill(
+            params, prompts, jnp.full((b,), s0, jnp.int32)
+        )
+        kv = cache["kv"]
+        cache = {
+            **cache,
+            "kv": {
+                "k": kv["k"].at[:, :, :s0].set(ks),
+                "v": kv["v"].at[:, :, :s0].set(vs),
+                "pos": kv["pos"].at[:, :s0].set(
+                    jnp.arange(s0, dtype=jnp.int32)
+                ),
+            },
+        }
+        return logits, cache
+
     def _coded_select(self, logits, step_key, deadline, true_params=None,
                       bucket_args=None):
         """One coded round on a (B, V) logits batch, fully traceable.
@@ -473,22 +525,26 @@ class Server:
         vp = padded_vocab(c.vocab_size)
         dt = DTYPES_LOGITS[c.logits_dtype]
 
-        # Prefill is one lax.scan over the prompt: a single compiled call
-        # instead of s0 Python-dispatched steps. The attention math is
-        # still sequential per position — a batched prefill that fills
-        # the per-family decode caches from one lm_logits-style pass is
-        # the next optimization (DESIGN.md §4).
-        def prefill_body(carry, inp):
-            cache, _ = carry
-            tok, pos = inp
-            logits, cache = self.model.decode_step(params, cache, tok, pos)
-            return (cache, logits), None
+        if self._can_batch_prefill():
+            # one batched forward fills the whole prompt's KV (§4) — the
+            # same ``Model.prefill`` splice the serve path uses, so both
+            # generation paths share one prefill implementation
+            logits, cache = self._prefill_into_cache(params, cache, prompts)
+            logits = logits.astype(dt)
+        else:
+            # sequential fallback for families without a batched
+            # cache-returning prefill (hybrid/ssm/audio, kv_quant, ...)
+            def prefill_body(carry, inp):
+                cache, _ = carry
+                tok, pos = inp
+                logits, cache = self.model.decode_step(params, cache, tok, pos)
+                return (cache, logits), None
 
-        (cache, logits), _ = jax.lax.scan(
-            prefill_body,
-            (cache, jnp.zeros((b, vp), dt)),
-            (prompts.T, jnp.arange(s0, dtype=jnp.int32)),
-        )
+            (cache, logits), _ = jax.lax.scan(
+                prefill_body,
+                (cache, jnp.zeros((b, vp), dt)),
+                (prompts.T, jnp.arange(s0, dtype=jnp.int32)),
+            )
 
         def step_logits(logits, step):
             if self.coded_head is None:
@@ -611,11 +667,87 @@ class Server:
         )
         return cache, logits, pos, toks
 
+    def _serve_step_paged_program(self, params, cache, logits, pos,
+                                  chunk_tokens, chunk_start, chunk_lens,
+                                  finishing, tables, active, key, deadline,
+                                  true_params=None, bucket_args=None, *,
+                                  steps):
+        """One fused PAGED serve iteration: prefill chunk + decode chunk.
+
+        The paged twin of ``_serve_step_program`` (DESIGN.md §13). Shapes
+        depend only on ``(num_blocks, block_len, S)`` and the prefill
+        chunk width — never on any request's prompt length — so admitting
+        a 4x-longer prompt retraces nothing: it just runs more admit
+        rounds of the SAME program.
+
+        **Prefill chunk** (``lax.cond``-gated): ``chunk_tokens`` is the
+        (S, C) batch of this round's prompt chunks, row s covering
+        prompt positions ``[chunk_start[s], chunk_start[s] +
+        chunk_lens[s])`` of slot s's request (``chunk_lens == 0``: slot
+        not prefilling). KV scatters into the slot's pool blocks through
+        ``tables``; ``finishing`` marks slots whose prompt COMPLETES
+        this round — their last-chunk logits become the slot's pending
+        logits and ``pos`` jumps to the prompt length, exactly like the
+        dense splice. Mid-prompt chunks update only the pool.
+
+        **Decode chunk**: as in the dense program, but each step runs
+        ``decode_step_paged`` — inactive slots (empty / done / still
+        prefilling) write to the pool's sink block and keep logits/pos.
+        """
+        self.serve_traces += 1  # python side effect: runs only while tracing
+        chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+        finishing = jnp.asarray(finishing, bool)
+        tables = jnp.asarray(tables, jnp.int32)
+        active = jnp.asarray(active, bool)
+
+        def splice(ops):
+            cache, logits, pos = ops
+            plog, new_cache = self.model.prefill_paged(
+                params, cache, chunk_tokens, chunk_start, chunk_lens, tables
+            )
+            new_logits = jnp.where(
+                finishing[:, None], plog.astype(jnp.float32), logits
+            )
+            new_pos = jnp.where(finishing, chunk_start + chunk_lens, pos)
+            return new_cache, new_logits, new_pos
+
+        cache, logits, pos = jax.lax.cond(
+            jnp.any(chunk_lens > 0), splice, lambda ops: ops,
+            (cache, jnp.asarray(logits, jnp.float32),
+             jnp.asarray(pos, jnp.int32)),
+        )
+
+        def body(carry, t):
+            cache, logits, pos = carry
+            sel = logits
+            if self.coded_head is not None:
+                sel = self._coded_select(
+                    logits, jax.random.fold_in(key, t), deadline, true_params,
+                    bucket_args,
+                )
+            tok = jnp.argmax(sel, -1).astype(jnp.int32)
+            nlog, cache = self.model.decode_step_paged(
+                params, cache, tok, pos, tables, active,
+                use_kernel=False,
+            )
+            logits = jnp.where(
+                active[:, None], nlog.astype(jnp.float32), logits
+            )
+            pos = jnp.where(active, pos + 1, pos)
+            return (cache, logits, pos), tok
+
+        (cache, logits, pos), toks = jax.lax.scan(
+            body, (cache, logits, pos), jnp.arange(steps, dtype=jnp.int32)
+        )
+        return cache, logits, pos, toks
+
     def serve(self, trace, *, slots: int = 4, prompt_cap: int | None = None,
               max_out: int | None = None, decode_block: int = 4,
               queue_cap: int = 64, admission_threshold: float = 1.0,
               controller=None, round_latency=None, telemetry=None,
-              clock=None, key=None) -> ServeReport:
+              clock=None, key=None, paged: bool | None = None,
+              block_len: int | None = None, num_blocks: int | None = None,
+              prefill_chunk: int | None = None) -> ServeReport:
         """Continuous batching: serve a request trace through S slots.
 
         ``trace``: iterable of ``serve.workload.Request`` (arrivals in
@@ -642,12 +774,23 @@ class Server:
         when ``controller`` is given — fed to
         ``controller.observe_timing`` so admission control and replans
         run on wall-clock evidence. Requires a coded head.
+
+        ``paged`` (default from ``ServeConfig.paged``) serves from the
+        block-pooled KV cache with chunked prefill (DESIGN.md §13):
+        ``prompt_cap`` then only sets the default admission chunk width
+        (``prefill_chunk``) — prompts longer than the chunk are admitted
+        and prefilled across successive admit rounds instead of raising,
+        and the cache shape is ``(num_blocks, block_len)``, independent
+        of any prompt length. ``num_blocks=None`` sizes the pool so the
+        trace can never exhaust it (dense-equivalent capacity);
+        an explicit pool turns on memory admission control.
         """
         from repro.serve.scheduler import SlotScheduler
 
         if clock is not None and self.coded_head is None:
             raise ValueError("clock (measured serving) requires a coded head")
 
+        paged = self.cfg.paged if paged is None else paged
         trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
         if not trace:
             raise ValueError("serve needs a non-empty request trace")
@@ -655,11 +798,15 @@ class Server:
             prompt_cap if prompt_cap is not None
             else max(r.prompt_len for r in trace)
         )
-        too_long = [r.rid for r in trace if r.prompt_len > prompt_cap]
-        if too_long:
-            raise ValueError(
-                f"requests {too_long} exceed prompt_cap={prompt_cap}"
-            )
+        if not paged:
+            # dense slot caches are (S, prompt_cap + max_out + 1): a
+            # longer prompt cannot be represented. Paged mode has no such
+            # bound — long prompts prefill chunk-by-chunk instead.
+            too_long = [r.rid for r in trace if r.prompt_len > prompt_cap]
+            if too_long:
+                raise ValueError(
+                    f"requests {too_long} exceed prompt_cap={prompt_cap}"
+                )
         max_out = int(
             max_out if max_out is not None else max(r.out_len for r in trace)
         )
@@ -673,6 +820,16 @@ class Server:
             reference = float(round_latency())
             if not np.isfinite(reference) or reference <= 0:
                 reference = 1.0
+        if paged:
+            return self._serve_paged(
+                trace, slots=slots, prompt_cap=prompt_cap, max_out=max_out,
+                decode_block=decode_block, queue_cap=queue_cap,
+                admission_threshold=admission_threshold,
+                controller=controller, round_latency=round_latency,
+                reference=reference, telemetry=telemetry, clock=clock,
+                key=key, block_len=block_len, num_blocks=num_blocks,
+                prefill_chunk=prefill_chunk,
+            )
         sched = SlotScheduler(
             slots, queue_cap=queue_cap,
             admission_threshold=admission_threshold,
@@ -798,6 +955,189 @@ class Server:
             wall_s=wall,
         )
 
+    def _serve_paged(self, trace, *, slots, prompt_cap, max_out,
+                     decode_block, queue_cap, admission_threshold,
+                     controller, round_latency, reference, telemetry, clock,
+                     key, block_len, num_blocks, prefill_chunk) -> ServeReport:
+        """Paged-KV host loop behind ``serve(paged=True)`` (DESIGN.md §13).
+
+        Differences from the dense loop: physical KV lives in a shared
+        ``BlockPool`` (full reservation at admission, freed at
+        retirement); prompts prefill in ``chunk``-token pieces across
+        admit rounds, so one compiled program per decode-chunk size
+        covers EVERY prompt length; and rounds where every busy slot is
+        still mid-prompt dispatch a prefill-only pass (``steps=0``).
+        """
+        from repro.serve.scheduler import BlockPool, SlotScheduler
+
+        chunk = int(prefill_chunk if prefill_chunk is not None
+                    else self.cfg.prefill_chunk if self.cfg.prefill_chunk
+                    is not None else prompt_cap)
+        bl = int(block_len if block_len is not None else self.cfg.block_len)
+        nb = num_blocks if num_blocks is not None else self.cfg.num_blocks
+        if nb is None:
+            # dense-equivalent capacity: every slot can hold the trace's
+            # largest request, so the pool never sheds — sizing DOWN from
+            # this is the knob that turns on memory admission control
+            per_req = max(
+                -(-(r.prompt_len + r.out_len + 1) // bl) for r in trace
+            )
+            nb = slots * per_req
+        nb = int(nb)
+        cache = self.model.init_paged_cache(nb, bl)
+        kv = cache["kv"]
+        bytes_per_block = (kv["k"].nbytes + kv["v"].nbytes) // (nb + 1)
+        pool = BlockPool(
+            nb, bl, bytes_per_block=bytes_per_block, telemetry=telemetry,
+        )
+        sched = SlotScheduler(
+            slots, queue_cap=queue_cap,
+            admission_threshold=admission_threshold,
+            round_latency=round_latency, reference_latency=reference,
+            telemetry=telemetry, pool=pool, chunk=chunk,
+        )
+        key = key if key is not None else jax.random.PRNGKey(0)
+        deadline = jnp.float32(
+            self.coded_head.deadline if self.coded_head is not None else 0.0
+        )
+        true_params = None
+        if self.coded_head is not None:
+            true_params = (
+                self._true_params
+                if self._true_params is not None
+                else self.coded_head.executor.worker_params
+            )
+        bucket_args = self._bucket_args()
+        logits = jnp.zeros(
+            (slots, padded_vocab(self.model.config.vocab_size)), jnp.float32
+        )
+        pos = jnp.zeros((slots,), jnp.int32)
+        # host mirror of the device block tables, width = pool size (a
+        # slot can never hold more than every block): shapes depend only
+        # on (num_blocks, block_len, S)
+        table_np = np.full((slots, nb), -1, np.int32)
+        no_chunk = jnp.zeros((slots, chunk), jnp.int32)
+        no_i32 = jnp.zeros((slots,), jnp.int32)
+        no_bool = jnp.zeros((slots,), bool)
+
+        now, i, call = 0.0, 0, 0
+        prefill_rounds = decode_rounds = 0
+        t0 = time.perf_counter()
+        while i < len(trace) or not sched.idle:
+            while i < len(trace) and trace[i].arrival <= now + 1e-9:
+                sched.offer(trace[i], now)
+                i += 1
+            placed = sched.fill_slots(now)
+            for si, _req in placed:
+                blocks = sched.slots[si].blocks
+                table_np[si, :] = -1
+                table_np[si, : len(blocks)] = blocks
+            # this round's prefill chunk: the next `chunk` unconsumed
+            # prompt tokens of EVERY slot still mid-prompt (fresh admits
+            # included) — one batched pass covers them all
+            chunk_np = start_np = lens_np = fin_np = None
+            notes = []
+            for si, s in enumerate(sched.slots):
+                if not s.prefilling:
+                    continue
+                if chunk_np is None:
+                    chunk_np = np.zeros((slots, chunk), np.int32)
+                    start_np = np.zeros((slots,), np.int32)
+                    lens_np = np.zeros((slots,), np.int32)
+                    fin_np = np.zeros((slots,), bool)
+                take = min(chunk, s.request.prompt_len - s.prefilled)
+                chunk_np[si, :take] = s.request.prompt[
+                    s.prefilled : s.prefilled + take
+                ]
+                start_np[si] = s.prefilled
+                lens_np[si] = take
+                fin_np[si] = s.prefilled + take >= s.request.prompt_len
+                notes.append((si, take))
+            prefilling = chunk_np is not None
+            # decode-eligible AFTER the splice: done prefilling already,
+            # or finishing it in this very dispatch (so a short prompt
+            # still costs exactly 1 admit round + out_len decode rounds,
+            # matching the dense path's accounting)
+            active = [
+                s.busy and not s.done
+                and (not s.prefilling or (fin_np is not None and fin_np[si]))
+                for si, s in enumerate(sched.slots)
+            ]
+            steps = 0
+            if any(active):
+                steps = min(
+                    decode_block,
+                    min(s.request.out_len - s.generated
+                        for si, s in enumerate(sched.slots) if active[si]),
+                )
+            if prefilling or steps > 0:
+                if clock is not None:
+                    deadline = jnp.float32(self.coded_head.deadline)
+                    true_params = (
+                        self._true_params
+                        if self._true_params is not None
+                        else self.coded_head.executor.worker_params
+                    )
+                    bucket_args = self._bucket_args()
+                skey = jax.random.fold_in(key, call)
+                args = (
+                    self.params, cache, logits, pos,
+                    jnp.asarray(chunk_np) if prefilling else no_chunk,
+                    jnp.asarray(start_np) if prefilling else no_i32,
+                    jnp.asarray(lens_np) if prefilling else no_i32,
+                    jnp.asarray(fin_np) if prefilling else no_bool,
+                    jnp.asarray(table_np), jnp.asarray(active), skey,
+                    deadline, true_params, bucket_args,
+                )
+                if clock is None:
+                    cache, logits, pos, _ = self._serve_step_paged_fn(
+                        *args, steps=steps
+                    )
+                else:
+                    timing = clock.measure(
+                        lambda: self._serve_step_paged_fn(*args, steps=steps),
+                        key=skey, true_cluster=self._true_cluster,
+                    )
+                    cache, logits, pos, _ = timing.result
+                    if controller is not None:
+                        d = controller.observe_timing(timing)
+                        if (
+                            d is not None and d.replanned
+                            and self.coded_head
+                                .executor.last_replan_structural
+                        ):
+                            clock.discard_next()
+                call += 1
+                for si, take in notes:
+                    sched.note_prefill(si, take)
+                if prefilling:  # the batched chunk pass costs one round
+                    now += 1.0
+                    prefill_rounds += 1
+                if steps > 0:
+                    now += float(steps)
+                    decode_rounds += steps
+                    sched.advance(steps)
+                for si, _fin in sched.retire_done(now):
+                    table_np[si, :] = -1
+            elif i < len(trace):
+                now = max(now, trace[i].arrival)  # idle: jump to next arrival
+            else:
+                break
+        jax.block_until_ready(logits)
+        wall = time.perf_counter() - t0
+        return ServeReport(
+            finished=tuple(sched.finished),
+            tokens=sum(
+                f.tokens for f in sched.finished if f.outcome == "done"
+            ),
+            rounds=now,
+            decode_rounds=decode_rounds,
+            prefill_rounds=prefill_rounds,
+            admitted=sched.admitted,
+            shed=sched.shed,
+            wall_s=wall,
+        )
+
     # ------------------------------------------------------------ public
     def generate(self, prompts, max_new: int | None = None, *, key=None,
                  cache_len: int | None = None, extras=None):
@@ -834,14 +1174,21 @@ class Server:
         """Per-token Python loop with numpy decode (reference/baseline).
 
         Kept for ``benchmarks/serve_throughput.py``: this is the path the
-        jit pipeline replaces — one host round-trip per prefill token and
-        per decoded token.
+        jit pipeline replaces — one host round-trip per decoded token.
+        Prefill routes through the same jitted ``Model.prefill`` splice
+        as the compiled pipeline (one shared prefill implementation)
+        where supported; only the token loop stays sequential.
         """
         b, s0 = prompts.shape
-        logits = None
-        for pos in range(s0):
-            logits, cache = self._decode(self.params, cache, prompts[:, pos],
-                                         jnp.int32(pos))
+        prompts = jnp.asarray(prompts, jnp.int32)
+        if self._can_batch_prefill():
+            logits, cache = self._prefill_fn(self.params, cache, prompts)
+        else:
+            logits = None
+            for pos in range(s0):
+                logits, cache = self._decode(
+                    self.params, cache, prompts[:, pos], jnp.int32(pos)
+                )
         out = [prompts]
         if self.coded_head is not None:
             logits = self._coded_logits(logits, key, 0)

@@ -16,6 +16,7 @@ from repro.serve.workload import (  # noqa: F401
     workload_names,
 )
 from repro.serve.scheduler import (  # noqa: F401
+    BlockPool,
     FinishedRequest,
     SlotScheduler,
     SlotState,

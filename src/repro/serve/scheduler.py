@@ -19,6 +19,15 @@ budget. ``round_latency`` is wired to
 sheds load *before* deadlines collapse when the tracker sees rounds
 slowing down. ``batch``-class requests are never shed for deadline risk;
 a full queue rejects any class.
+
+Paged serving (DESIGN.md §13) adds the physical-memory dimension: a
+``BlockPool`` free list of fixed KV blocks. Admission then requires the
+request's full block reservation (prompt + out_len + 1 tokens, rounded
+up to blocks) to be allocatable: a request that can NEVER fit the pool
+is shed at enqueue time with reason ``pool_exhausted`` (admission
+control on memory, not queue depth alone), while transient pressure
+just holds the queue head until blocks free. Blocks are freed on
+retirement/eviction and reused LIFO.
 """
 from __future__ import annotations
 
@@ -28,6 +37,79 @@ from typing import Callable
 from repro.serve.workload import CLASS_PRIORITY, DEADLINE_SLACK, Request
 
 
+class BlockPool:
+    """Free list over a fixed pool of physical KV blocks.
+
+    The device side never sees this object — it only receives the block
+    tables the scheduler builds from these allocations. LIFO reuse keeps
+    recently-freed (cache-warm) blocks hot and makes reuse assertable in
+    tests. Telemetry (``kv_bytes`` / ``blocks_in_use`` /
+    ``blocks_freed`` events, DESIGN.md §8) makes pool pressure
+    observable alongside ``round_timing``.
+    """
+
+    def __init__(self, num_blocks: int, block_len: int, *,
+                 bytes_per_block: int = 0, telemetry=None):
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be > 0, got {num_blocks}")
+        if block_len <= 0:
+            raise ValueError(f"block_len must be > 0, got {block_len}")
+        self.num_blocks = int(num_blocks)
+        self.block_len = int(block_len)
+        self.bytes_per_block = int(bytes_per_block)
+        self.telemetry = telemetry
+        # stack: first allocations get blocks 0, 1, ...; frees push back
+        # on top so the most recently freed blocks are reused first
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self.blocks_freed = 0  # cumulative
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` KV entries."""
+        return -(-int(tokens) // self.block_len)
+
+    def alloc(self, n: int, *, rid=None, now: float = 0.0) -> list[int] | None:
+        """Take ``n`` blocks off the free list; None if unavailable."""
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._emit(rid, now, freed=0)
+        return got
+
+    def free(self, blocks, *, rid=None, now: float = 0.0) -> None:
+        self._free.extend(blocks)
+        self.blocks_freed += len(blocks)
+        if blocks:
+            self._emit(rid, now, freed=len(blocks))
+
+    def _emit(self, rid, now: float, *, freed: int) -> None:
+        if self.telemetry is None:
+            return
+        common = dict(request_id=rid, round=float(now))
+        if freed:
+            self.telemetry.event(
+                "blocks_freed", blocks=freed,
+                total_freed=self.blocks_freed, **common,
+            )
+        self.telemetry.event(
+            "blocks_in_use", in_use=self.blocks_in_use,
+            free=self.free_blocks, capacity=self.num_blocks, **common,
+        )
+        self.telemetry.event(
+            "kv_bytes",
+            bytes_in_use=self.blocks_in_use * self.bytes_per_block,
+            bytes_total=self.num_blocks * self.bytes_per_block,
+            utilization=self.blocks_in_use / self.num_blocks, **common,
+        )
+
+
 @dataclasses.dataclass
 class SlotState:
     """One padded stream slot of the running decode scan."""
@@ -35,14 +117,24 @@ class SlotState:
     request: Request | None = None
     admitted_at: float = 0.0  # round the request entered the slot
     generated: int = 0  # tokens emitted so far (first token lands at admit)
+    prefilled: int = 0  # prompt tokens prefilled so far (chunked prefill)
+    blocks: tuple[int, ...] = ()  # physical KV blocks reserved (paged)
 
     @property
     def busy(self) -> bool:
         return self.request is not None
 
     @property
+    def prefilling(self) -> bool:
+        """Still consuming prompt chunks (not yet decode-eligible)."""
+        return self.busy and self.prefilled < self.request.prompt_len
+
+    @property
     def done(self) -> bool:
-        return self.busy and self.generated >= self.request.out_len
+        return (
+            self.busy and not self.prefilling
+            and self.generated >= self.request.out_len
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +176,8 @@ class SlotScheduler:
         round_latency: Callable[[], float] | None = None,
         reference_latency: float = 1.0,
         telemetry=None,
+        pool: BlockPool | None = None,
+        chunk: int | None = None,
     ):
         if slots <= 0:
             raise ValueError(f"slots must be > 0, got {slots}")
@@ -100,6 +194,8 @@ class SlotScheduler:
         self.round_latency = round_latency
         self.reference_latency = float(reference_latency)
         self.telemetry = telemetry
+        self.pool = pool
+        self.chunk = chunk
         self.finished: list[FinishedRequest] = []
         self.shed = 0
         self.admitted = 0
@@ -117,6 +213,18 @@ class SlotScheduler:
     def idle(self) -> bool:
         return not self.queue and all(not s.busy for s in self.slots)
 
+    def _work(self, req: Request) -> float:
+        """Rounds of compute a request costs; chunked prefill counts
+        one round per prompt chunk instead of one flat admit round."""
+        if self.chunk is None:
+            return float(req.work)
+        return float(-(-req.prompt_len // self.chunk) + req.out_len)
+
+    def blocks_needed(self, req: Request) -> int:
+        """Full KV reservation: prompt + generated tokens + next write."""
+        assert self.pool is not None
+        return self.pool.blocks_for(req.prompt_len + req.out_len + 1)
+
     def _latency_factor(self) -> float:
         """Current round latency relative to the reference (>= 0)."""
         if self.round_latency is None:
@@ -132,18 +240,26 @@ class SlotScheduler:
         if len(self.queue) >= self.queue_cap:
             self._shed(req, now, "queue_full")
             return False
+        if self.pool is not None and self.blocks_needed(req) > self.pool.num_blocks:
+            # memory admission control: the reservation can NEVER be
+            # satisfied, even by an empty pool — shed now rather than
+            # deadlocking at the queue head (transient pressure from
+            # in-flight requests just waits for frees instead).
+            self._shed(req, now, "pool_exhausted")
+            return False
         slack = DEADLINE_SLACK[req.deadline_class]
         if slack != float("inf"):
             # projected completion: the backlog ahead of this request
             # drains ``slots`` streams at a time, then the request runs
             # its own prefill + decode — all scaled by how slow the
             # fleet's rounds currently are vs the reference.
-            backlog = sum(r.work for r, _ in self.queue) + sum(
-                s.request.work - s.generated
+            work = self._work(req)
+            backlog = sum(self._work(r) for r, _ in self.queue) + sum(
+                self._work(s.request) - s.generated
                 for s in self.slots if s.busy and s.request is not None
             )
-            est = (backlog / self.num_slots + req.work) * self._latency_factor()
-            budget = slack * req.work / self.admission_threshold
+            est = (backlog / self.num_slots + work) * self._latency_factor()
+            budget = slack * work / self.admission_threshold
             if est > budget:
                 self._shed(req, now, "deadline_risk")
                 return False
@@ -182,9 +298,28 @@ class SlotScheduler:
         for slot_idx in free:
             if not self.queue:
                 break
+            blocks: tuple[int, ...] = ()
+            if self.pool is not None:
+                # full reservation up front: admission is the only point
+                # that can fail on memory, so a slotted request always
+                # runs to completion. Head-of-line waits (FIFO, no
+                # deadlock: its reservation fits an empty pool or offer
+                # would have shed it).
+                req_head = self.queue[0][0]
+                got = self.pool.alloc(
+                    self.blocks_needed(req_head), rid=req_head.rid, now=now
+                )
+                if got is None:
+                    break
+                blocks = tuple(got)
             req, arrived = self.queue.pop(0)
+            # without chunked prefill the whole prompt is spliced in at
+            # admission; with it, the serve loop reports progress via
+            # note_prefill() as chunks land across admit rounds.
+            done_prefill = req.prompt_len if self.chunk is None else 0
             self.slots[slot_idx] = SlotState(
-                request=req, admitted_at=now, generated=0
+                request=req, admitted_at=now, generated=0,
+                prefilled=done_prefill, blocks=blocks,
             )
             self.admitted += 1
             placed.append((slot_idx, req))
@@ -198,12 +333,22 @@ class SlotScheduler:
         return placed
 
     def advance(self, emitted: int = 1, now: float | None = None) -> None:
-        """Account ``emitted`` new tokens on every busy, unfinished slot."""
+        """Account ``emitted`` new tokens on every busy, unfinished slot.
+
+        Slots still prefilling (chunked prefill in flight) are not
+        decoding yet and accrue nothing.
+        """
         for s in self.slots:
-            if s.busy and not s.done:
+            if s.busy and not s.prefilling and not s.done:
                 s.generated = min(
                     s.generated + emitted, s.request.out_len
                 )
+
+    def note_prefill(self, slot_idx: int, tokens: int) -> None:
+        """Record ``tokens`` prompt tokens prefilled into a slot."""
+        s = self.slots[slot_idx]
+        if s.busy:
+            s.prefilled = min(s.prefilled + tokens, s.request.prompt_len)
 
     def retire_done(self, now: float) -> list[tuple[int, FinishedRequest]]:
         """Evict finished streams; their slots become admissible again."""
@@ -218,6 +363,8 @@ class SlotScheduler:
             )
             self.finished.append(fin)
             out.append((i, fin))
+            if self.pool is not None and s.blocks:
+                self.pool.free(s.blocks, rid=req.rid, now=now)
             self.slots[i] = SlotState()
             if self.telemetry is not None:
                 self.telemetry.event(

@@ -1,0 +1,362 @@
+"""Paged KV serving (DESIGN.md §13): kernel-family parity, dense-oracle
+bit-parity, block-pool policy, memory admission control, chunked
+prefill, and the no-retrace guarantee across prompt lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import ClusterSpec
+from repro.kernels import paged_attention as pa
+from repro.models.model import Model
+from repro.runtime.control import AdaptiveController
+from repro.runtime.executor import CodedRoundExecutor
+from repro.runtime.serve_loop import ServeConfig, Server
+from repro.serve import BlockPool, Request, SlotScheduler, make_workload
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _req(rid, arrival=0.0, out_len=4, cls="standard", plen=3):
+    return Request(rid=rid, arrival=arrival, prompt=tuple(range(1, plen + 1)),
+                   out_len=out_len, deadline_class=cls)
+
+
+class _Sink:
+    """Telemetry stand-in capturing (name, fields) event records."""
+
+    def __init__(self):
+        self.events = []
+
+    def event(self, name, **fields):
+        self.events.append((name, fields))
+
+
+def _rand_paged(seed, *, s=3, nb=6, bl=4, kv=2, g=2, hd=8):
+    """Random pool + a scattered (non-contiguous) block layout."""
+    rng = np.random.default_rng(seed)
+    k_pool = rng.standard_normal((nb + 1, bl, kv, hd)).astype(np.float32)
+    v_pool = rng.standard_normal((nb + 1, bl, kv, hd)).astype(np.float32)
+    q = rng.standard_normal((s, kv, g, hd)).astype(np.float32)
+    table = np.full((s, nb), -1, np.int32)
+    table[0, :2] = [3, 0]
+    table[1, :3] = [1, 4, 2]
+    table[2, :1] = [5]
+    pos = np.array([5, 9, 2], np.int32)
+    return q, k_pool, v_pool, table, pos
+
+
+# --------------------------------------------- kernel family: ref/ops/pallas
+def test_paged_decode_attend_family_parity():
+    q, k_pool, v_pool, table, pos = _rand_paged(1)
+    want = pa.paged_decode_attend_ref(q, k_pool, v_pool, table, pos)
+    got_ops = np.asarray(pa.paged_decode_attend(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), jnp.asarray(pos),
+    ))
+    np.testing.assert_allclose(got_ops, want, rtol=1e-5, atol=1e-5)
+    got_kernel = np.asarray(pa.paged_decode_attend_kernel(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), jnp.asarray(pos), interpret=True,
+    ))
+    np.testing.assert_allclose(got_kernel, want, rtol=1e-5, atol=1e-5)
+
+
+def test_paged_chunk_attend_matches_ref():
+    rng = np.random.default_rng(2)
+    _, k_pool, v_pool, table, _ = _rand_paged(2)
+    s, c = table.shape[0], 3
+    q = rng.standard_normal((s, c, 2, 2, 8)).astype(np.float32)
+    start = np.array([2, 6, 0], np.int32)
+    q_pos = start[:, None] + np.arange(c, dtype=np.int32)[None, :]
+    want = pa.paged_chunk_attend_ref(q, k_pool, v_pool, table, q_pos)
+    got = np.asarray(pa.paged_chunk_attend(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), jnp.asarray(q_pos),
+    ))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_routes_inactive_rows_to_sink():
+    """Frozen/padded rows must write ONLY the sink block — a freed block
+    reassigned to another stream can never be corrupted by them."""
+    nb, bl, kv, hd = 4, 2, 1, 3
+    k_pool = jnp.zeros((nb + 1, bl, kv, hd))
+    v_pool = jnp.zeros((nb + 1, bl, kv, hd))
+    table = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    k_new = jnp.ones((2, kv, hd))
+    pos = jnp.asarray([1, 3], jnp.int32)
+    active = jnp.asarray([True, False])
+    k2, _ = pa.scatter_decode(k_pool, v_pool, k_new, k_new, table, pos, active)
+    k2 = np.asarray(k2)
+    assert np.all(k2[0, 1] == 1.0)  # active slot 0: block 0, offset 1
+    assert np.all(k2[1:nb] == 0.0)  # inactive slot 1 touched no real block
+    assert np.all(k2[nb, 1] == 1.0)  # its write landed in the sink
+
+
+# ----------------------------------------- dense-oracle bit parity (decode)
+def test_decode_step_paged_bitmatches_dense_slot_oracle():
+    """Same history, same tokens: paged decode logits must BIT-match the
+    dense slot-cache path (identical einsums / promotion points), so the
+    coded head sees identical inputs under either cache layout."""
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    slots, s0, steps, bl = 2, 6, 4, 4
+    cache_len = s0 + steps + 1
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (slots, s0), 0,
+                                c.vocab_size).astype(jnp.int32)
+    plog, ks, vs = m.prefill(params, tokens, jnp.full((slots,), s0, jnp.int32))
+
+    dense = m.init_slot_cache(slots, cache_len)
+    kv = dense["kv"]
+    seq = jnp.arange(s0, dtype=jnp.int32)
+    dense = {"kv": {
+        "k": kv["k"].at[:, :, :s0].set(ks),
+        "v": kv["v"].at[:, :, :s0].set(vs),
+        "pos": kv["pos"].at[:, :s0].set(jnp.broadcast_to(seq, (slots, s0))),
+    }}
+
+    mb = -(-cache_len // bl)
+    nb = slots * mb
+    paged = m.init_paged_cache(nb, bl)
+    table_np = np.full((slots, nb), -1, np.int32)
+    for s in range(slots):
+        table_np[s, :mb] = np.arange(s * mb, (s + 1) * mb)
+    pk = np.array(paged["kv"]["k"])
+    pv = np.array(paged["kv"]["v"])
+    ks_np, vs_np = np.asarray(ks), np.asarray(vs)
+    for s in range(slots):
+        for t in range(s0):
+            pk[:, table_np[s, t // bl], t % bl] = ks_np[:, s, t]
+            pv[:, table_np[s, t // bl], t % bl] = vs_np[:, s, t]
+    paged = {"kv": {"k": jnp.asarray(pk), "v": jnp.asarray(pv)}}
+    table = jnp.asarray(table_np)
+    active = jnp.ones((slots,), bool)
+
+    pos = jnp.full((slots,), s0, jnp.int32)
+    dlog = plog_p = plog
+    for _ in range(steps):
+        tok = jnp.argmax(dlog, -1).astype(jnp.int32)
+        dlog, dense = m.decode_step_slots(params, dense, tok, pos)
+        plog_p, paged = m.decode_step_paged(params, paged, tok, pos, table,
+                                            active)
+        assert np.array_equal(np.asarray(dlog), np.asarray(plog_p)), (
+            "paged decode logits must bit-match the dense slot oracle"
+        )
+        pos = pos + 1
+
+
+def test_chunked_prefill_paged_matches_full_prefill_logits():
+    """Prefilling in chunks across rounds reproduces the one-shot
+    batched prefill's pending logits (the serve loop's admission path
+    for prompts longer than the chunk)."""
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    slots, chunk, bl = 2, 4, 4
+    plens = [7, 5]
+    s0 = max(plens)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (slots, s0), 0,
+                                c.vocab_size).astype(jnp.int32)
+    want, _, _ = m.prefill(params, tokens,
+                           jnp.asarray(plens, jnp.int32))
+
+    mb = -(-(s0 + 1) // bl)
+    nb = slots * mb
+    cache = m.init_paged_cache(nb, bl)
+    table_np = np.full((slots, nb), -1, np.int32)
+    for s in range(slots):
+        table_np[s, :mb] = np.arange(s * mb, (s + 1) * mb)
+    table = jnp.asarray(table_np)
+
+    prefilled = [0] * slots
+    final = {}
+    while any(prefilled[s] < plens[s] for s in range(slots)):
+        takes = [min(chunk, plens[s] - prefilled[s]) for s in range(slots)]
+        chunk_tok = np.zeros((slots, chunk), np.int32)
+        for s in range(slots):
+            if takes[s]:
+                chunk_tok[s, :takes[s]] = np.asarray(
+                    tokens[s, prefilled[s]:prefilled[s] + takes[s]]
+                )
+        logits, cache = m.prefill_paged(
+            params, cache, jnp.asarray(chunk_tok),
+            jnp.asarray(prefilled, jnp.int32),
+            jnp.asarray(takes, jnp.int32), table,
+        )
+        for s in range(slots):
+            prefilled[s] += takes[s]
+            if takes[s] and prefilled[s] >= plens[s]:
+                final[s] = np.asarray(logits[s])
+    for s in range(slots):
+        np.testing.assert_allclose(final[s], np.asarray(want[s]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------- serve(): paged == dense A/B
+@pytest.mark.parametrize("safety,seed", [(1.2, 0), (3.0, 1)])
+def test_paged_serve_matches_dense_across_erasure_grid(safety, seed):
+    """Same trace, same key, same deadline => same erasure masks: the
+    paged path must reproduce the dense run's schedule exactly (token
+    counts, finish rounds, round accounting) — any logits divergence
+    would change an argmax somewhere and break this."""
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    server = Server(m, params, ClusterSpec.make([2, 2], [4.0, 0.8]),
+                    ServeConfig(block_rows=64, deadline_safety=safety))
+    wl = make_workload("poisson", num_requests=6, prompt_len=(4, 8),
+                       out_len=(2, 5), vocab=c.vocab_size)
+    trace = wl.trace(seed=seed)
+    key = jax.random.PRNGKey(seed)
+    rep_d = server.serve(trace, slots=2, decode_block=2, paged=False, key=key)
+    rep_p = server.serve(trace, slots=2, decode_block=2, paged=True, key=key)
+    assert rep_p.tokens == rep_d.tokens
+    assert rep_p.rounds == rep_d.rounds
+    assert rep_p.decode_rounds == rep_d.decode_rounds
+    assert rep_p.admitted == rep_d.admitted and rep_p.shed == rep_d.shed
+    done_d = {f.request.rid: f for f in rep_d.finished if f.outcome == "done"}
+    done_p = {f.request.rid: f for f in rep_p.finished if f.outcome == "done"}
+    assert done_d.keys() == done_p.keys()
+    for rid, f in done_d.items():
+        assert done_p[rid].finish_round == f.finish_round
+        assert done_p[rid].tokens == f.tokens
+
+
+# ------------------------------------------------ serve(): retrace pinning
+def test_paged_serve_one_trace_across_8x_prompt_spread():
+    """Prompt lengths spread 8x within and across traces: ONE compiled
+    program total (decode_block=1 => a single steps variant). Shapes
+    depend only on (num_blocks, block_len, S) — never a prompt length."""
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    server = Server(m, params, ClusterSpec.make([2, 2], [4.0, 0.8]),
+                    ServeConfig(block_rows=64))
+    plens = [4, 32, 8, 16, 32, 4]
+    trace = [_req(i, arrival=2.0 * i, out_len=3, plen=p)
+             for i, p in enumerate(plens)]
+    bl, nb = 4, 2 * -(-(32 + 3 + 1) // 4)
+    kw = dict(slots=2, decode_block=1, paged=True, block_len=bl,
+              num_blocks=nb)
+    rep = server.serve(trace, **kw)
+    assert server.serve_traces == 1
+    assert sum(1 for f in rep.finished if f.outcome == "done") == len(plens)
+    # a second trace with a different prompt-length mix compiles nothing
+    trace2 = [_req(i, arrival=1.5 * i, out_len=3, plen=p)
+              for i, p in enumerate([32, 4, 24, 6])]
+    server.serve(trace2, prompt_cap=32, **kw)
+    assert server.serve_traces == 1
+
+
+def test_long_prompt_admits_via_chunked_prefill_where_dense_raises():
+    c = ARCHS["qwen3-0.6b"].reduced()
+    m = Model(c)
+    params = m.init_params(KEY)
+    server = Server(m, params, ClusterSpec.make([2, 2], [4.0, 0.8]),
+                    ServeConfig(block_rows=64))
+    long_req = _req(0, out_len=3, plen=37)
+    trace = [long_req, _req(1, arrival=1.0, out_len=3, plen=5)]
+    with pytest.raises(ValueError, match="exceed prompt_cap"):
+        server.serve(trace, slots=2, prompt_cap=8, paged=False)
+    rep = server.serve(trace, slots=2, prompt_cap=8, paged=True,
+                       decode_block=2)
+    done = {f.request.rid: f for f in rep.finished if f.outcome == "done"}
+    assert set(done) == {0, 1}
+    assert done[0].tokens == 3
+    assert rep.prefill_rounds >= -(-37 // 8)  # one round per chunk
+
+
+# ----------------------------------------------------- BlockPool + policy
+def test_block_pool_lifo_reuse():
+    with pytest.raises(ValueError, match="num_blocks"):
+        BlockPool(0, 4)
+    with pytest.raises(ValueError, match="block_len"):
+        BlockPool(4, 0)
+    pool = BlockPool(6, 4)
+    assert pool.blocks_for(1) == 1 and pool.blocks_for(9) == 3
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    assert a == [0, 1] and b == [2, 3]
+    assert pool.alloc(3) is None  # only 2 free; pool state untouched
+    assert pool.free_blocks == 2
+    pool.free(a)
+    assert pool.alloc(3) == [1, 0, 4]  # most recently freed reused first
+    assert pool.blocks_freed == 2
+
+
+def test_scheduler_reuses_freed_blocks_after_retirement():
+    pool = BlockPool(2, 4)
+    sched = SlotScheduler(1, pool=pool)
+    assert sched.offer(_req(0, plen=3, out_len=4, cls="batch"), 0.0)
+    assert sched.offer(_req(1, plen=3, out_len=4, cls="batch"), 0.0)
+    (si, _), = sched.fill_slots(0.0)
+    first = sched.slots[si].blocks
+    assert first == (0, 1)
+    assert sched.fill_slots(0.0) == []  # pool empty: head waits, no shed
+    sched.advance(4)
+    sched.retire_done(4.0)
+    assert pool.free_blocks == 2 and pool.blocks_freed == 2
+    (si2, r2), = sched.fill_slots(4.0)
+    assert r2.rid == 1
+    assert set(sched.slots[si2].blocks) == {0, 1}  # LIFO reuse of the frees
+
+
+def test_pool_exhaustion_sheds_only_never_fitting_requests():
+    sink = _Sink()
+    pool = BlockPool(2, 4, telemetry=sink)
+    sched = SlotScheduler(2, pool=pool, telemetry=sink)
+    big = _req(0, plen=20, out_len=20, cls="batch")  # 11 blocks > 2: never
+    assert not sched.offer(big, 0.0)
+    shed = [f for f in sched.finished if f.outcome == "shed"]
+    assert [f.reason for f in shed] == ["pool_exhausted"]
+    evicted = [f for n, f in sink.events if n == "request_evicted"]
+    assert evicted[0]["reason"] == "pool_exhausted"
+    # a request that fits an EMPTY pool is never shed on memory, even
+    # when the pool is currently full — it waits at the queue head
+    assert sched.offer(_req(1, plen=3, out_len=4, cls="batch"), 0.0)
+    sched.fill_slots(0.0)
+    assert sched.offer(_req(2, plen=3, out_len=4, cls="batch"), 0.0)
+    assert sched.fill_slots(0.0) == []
+    assert all(f.reason != "pool_exhausted"
+               for f in sched.finished[len(shed):])
+
+
+def test_block_pool_telemetry_schema():
+    sink = _Sink()
+    pool = BlockPool(4, 2, bytes_per_block=128, telemetry=sink)
+    got = pool.alloc(3, rid=7, now=2.0)
+    assert [n for n, _ in sink.events] == ["blocks_in_use", "kv_bytes"]
+    use = sink.events[0][1]
+    assert use == {"in_use": 3, "free": 1, "capacity": 4,
+                   "request_id": 7, "round": 2.0}
+    kvb = sink.events[1][1]
+    assert kvb == {"bytes_in_use": 384, "bytes_total": 512,
+                   "utilization": 0.75, "request_id": 7, "round": 2.0}
+    pool.free(got[:2], rid=7, now=3.0)
+    assert [n for n, _ in sink.events[2:]] == [
+        "blocks_freed", "blocks_in_use", "kv_bytes"
+    ]
+    freed = sink.events[2][1]
+    assert freed == {"blocks": 2, "total_freed": 2,
+                     "request_id": 7, "round": 3.0}
+
+
+# ------------------------------------------------- controller-chosen slots
+def test_recommend_slots_scales_with_measured_latency():
+    exe = CodedRoundExecutor(
+        ClusterSpec.make([8, 16, 8], [4.0, 1.0, 0.25]), 1_000, "optimal"
+    )
+    ctl = AdaptiveController(exe)
+    cur = ctl.coverage_latency()
+    assert np.isfinite(cur) and cur > 0
+    assert ctl.recommend_slots(base=4) == 4  # no drift: estimates == plan
+    assert ctl.recommend_slots(base=4, reference=2 * cur) == 8
+    assert ctl.recommend_slots(base=4, reference=cur / 2) == 2
+    assert ctl.recommend_slots(base=4, reference=100 * cur) == 16  # hi=4*base
+    assert ctl.recommend_slots(base=4, reference=cur / 100) == 1  # lo
+    assert ctl.recommend_slots(base=4, reference=float("inf")) == 4  # fallback
+    with pytest.raises(ValueError, match="base"):
+        ctl.recommend_slots(base=0)

@@ -410,6 +410,9 @@ def _gate_golden():
         "speedup_tokens_per_s": 4.0,
         "decode_latency_s": {"speedup": 20.0, "jit": 1e-4, "numpy": 2e-3},
         "jit": {"tokens_per_s": 1000.0, "generate_s": 0.1},
+        "phases": {"prefill_per_decode_token": 2.5,
+                   "erasure_share_of_decode": 0.1},
+        "paged": {"tokens_per_s_ratio": 1.5},
     }
 
 
@@ -433,7 +436,7 @@ def test_perf_gate_bands_and_absolute_enforcement(tmp_path, monkeypatch):
     saved = json.loads((tmp_path / "perf_gate.json").read_text())
     assert saved["passed"]
     assert {e["event"] for e in saved["events"]} == {"perf_gate"}
-    assert len(saved["events"]) == len(saved["metrics"]) == 4
+    assert len(saved["events"]) == len(saved["metrics"]) == 7
 
     # a 19% ratio regression sits inside the 20% band; 25% fails the CI
     inside = copy.deepcopy(golden)
@@ -445,6 +448,21 @@ def test_perf_gate_bands_and_absolute_enforcement(tmp_path, monkeypatch):
     beyond["decode_latency_s"]["speedup"] = 20.0 * 0.75
     monkeypatch.setattr(perf_gate, "_measure", lambda runs: beyond)
     with pytest.raises(SystemExit, match="perf gate FAILED"):
+        perf_gate.run(runs=1)
+
+    # per-phase rows are lower-is-better: a prefill blow-up (e.g. the
+    # batched splice regressing to the sequential scan) fails on its own
+    # even though every end-to-end ratio is untouched
+    phase_reg = copy.deepcopy(golden)
+    phase_reg["phases"]["prefill_per_decode_token"] = 2.5 * 1.25
+    monkeypatch.setattr(perf_gate, "_measure", lambda runs: phase_reg)
+    with pytest.raises(SystemExit, match="prefill_per_decode_token"):
+        perf_gate.run(runs=1)
+    # ...and the paged/dense tokens-per-s ratio gates higher-is-better
+    paged_reg = copy.deepcopy(golden)
+    paged_reg["paged"]["tokens_per_s_ratio"] = 1.5 * 0.75
+    monkeypatch.setattr(perf_gate, "_measure", lambda runs: paged_reg)
+    with pytest.raises(SystemExit, match="paged_over_dense_tokens_per_s"):
         perf_gate.run(runs=1)
     assert not json.loads(
         (tmp_path / "perf_gate.json").read_text()
