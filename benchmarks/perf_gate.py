@@ -1,7 +1,7 @@
 """Performance regression gate: measured serving perf vs committed goldens.
 
 ``PYTHONPATH=src python -m benchmarks.perf_gate [--tolerance 0.2]
-[--absolute] [--update-golden]``
+[--absolute] [--update-golden] [--profile]``
 
 Correctness regressions already fail CI; this module makes *performance*
 regressions do the same. It re-measures the serving path the way
@@ -34,6 +34,14 @@ explicit re-baseline path. Results (per-metric rows + ``perf_gate``
 telemetry events, DESIGN.md §8) land in
 ``artifacts/bench/perf_gate.json`` and upload with the other bench
 artifacts in CI.
+
+``--profile`` (DESIGN.md §14) wraps the gated measurement in
+``jax.profiler.trace``: each benchmark phase runs under a
+``TraceAnnotation`` window, ``repro.obs.profile`` buckets the captured
+op events per phase, and — when the golden was re-baselined with
+``--update-golden --profile`` — any failing ratio row is reported WITH
+the phase whose wall time grew most vs the golden and its top-K op
+diff, so the gate names what regressed, not just that something did.
 """
 from __future__ import annotations
 
@@ -75,24 +83,34 @@ def _get(record: dict, path) -> float:
     return float(record)
 
 
-def _measure(runs: int) -> dict:
+def _measure(runs: int, profile_dir=None, decode_pad_s: float = 0.0) -> dict:
     """Fresh serve_throughput record, written to a temp dir — the
     committed golden must survive the measurement that is judged
-    against it."""
+    against it. ``profile_dir`` captures an XLA profile of the
+    measurement; ``decode_pad_s`` injects a forced decode regression
+    (testing hook)."""
     keep = common.ARTIFACTS
     tmp = tempfile.mkdtemp(prefix="perf_gate_")
     common.ARTIFACTS = tmp
     try:
-        return serve_throughput.run(runs=runs)
+        return serve_throughput.run(
+            runs=runs, profile_dir=profile_dir, decode_pad_s=decode_pad_s
+        )
     finally:
         common.ARTIFACTS = keep
 
 
 def run(tolerance: float = 0.2, absolute: bool = False, runs: int = 3,
-        update_golden: bool = False):
+        update_golden: bool = False, profile: bool = False,
+        profile_dir: str | None = None,
+        inject_decode_pad_s: float = 0.0):
     golden_path = os.path.join(common.ARTIFACTS, f"{GOLDEN}.json")
+    if profile and profile_dir is None:
+        profile_dir = os.path.join(common.ARTIFACTS, "profile")
     if update_golden:
-        record = serve_throughput.run(runs=runs)  # writes the golden
+        # writes the golden (with its phase op summary under --profile,
+        # the baseline the gating path diffs against)
+        record = serve_throughput.run(runs=runs, profile_dir=profile_dir)
         print(f"re-baselined golden {os.path.abspath(golden_path)}")
         return record
     if not os.path.exists(golden_path):
@@ -101,7 +119,11 @@ def run(tolerance: float = 0.2, absolute: bool = False, runs: int = 3,
         )
     with open(golden_path) as f:
         golden = json.load(f)
-    measured = _measure(runs)
+    if profile or inject_decode_pad_s:
+        measured = _measure(runs, profile_dir, inject_decode_pad_s)
+    else:
+        # positional single-arg call: the stable interface tests stub
+        measured = _measure(runs)
 
     tel = Telemetry(None)
     rows, failures = [], []
@@ -134,14 +156,42 @@ def run(tolerance: float = 0.2, absolute: bool = False, runs: int = 3,
         "runs": runs,
         "metrics": rows,
         "passed": not failures,
-        "events": tel.events,
+        "events": list(tel.events),
     }
+    # op-level attribution (§14): with --profile AND a golden captured
+    # the same way, a failing ratio row comes with the phase whose wall
+    # time grew most vs the baseline and its top-K op diff — the gate
+    # then *explains* the regression instead of just asserting it
+    diff_text = None
+    if profile:
+        from repro.obs.profile import diff_summaries, format_diff
+
+        record["profile_summary"] = measured.get("profile_summary")
+        if measured.get("profile_summary") and golden.get("profile_summary"):
+            diff = diff_summaries(
+                measured["profile_summary"], golden["profile_summary"]
+            )
+            record["profile_diff"] = diff
+            diff_text = format_diff(diff)
+            if failures:
+                diff_text += (
+                    f"\nregressed phase: {diff['worst_phase']} "
+                    f"(x{diff['worst_ratio']:.2f} wall vs golden)"
+                )
+        elif failures:
+            diff_text = (
+                "no golden profile summary to diff against — re-baseline "
+                "with --update-golden --profile"
+            )
     path = common.save("perf_gate", record)
     print(f"wrote {path}")
+    if diff_text:
+        print(diff_text)
     if failures:
-        raise SystemExit(
-            "perf gate FAILED:\n  " + "\n  ".join(failures)
-        )
+        msg = "perf gate FAILED:\n  " + "\n  ".join(failures)
+        if diff_text:
+            msg += "\n" + diff_text
+        raise SystemExit(msg)
     print(f"perf gate passed ({len(rows)} metrics, "
           f"tolerance {tolerance:.0%})")
     return record
@@ -161,10 +211,28 @@ def main():
                     help="timed generate repetitions per path")
     ap.add_argument("--update-golden", action="store_true",
                     help="re-baseline: overwrite the committed golden "
-                         "with a fresh measurement instead of gating")
+                         "with a fresh measurement instead of gating "
+                         "(add --profile to bake the phase op summary "
+                         "into the golden)")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture the measurement under "
+                         "jax.profiler.trace and attach a per-phase "
+                         "top-K op diff vs the golden's summary to any "
+                         "failing ratio row")
+    ap.add_argument("--profile-dir", default=None,
+                    help="where the XLA capture lands (default "
+                         "artifacts/bench/profile; uploaded with the "
+                         "bench artifacts in CI)")
+    ap.add_argument("--inject-decode-pad", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="testing hook: sleep this long inside each "
+                         "timed jit-generate iteration to force a "
+                         "decode regression the gate must catch")
     args = ap.parse_args()
     run(tolerance=args.tolerance, absolute=args.absolute, runs=args.runs,
-        update_golden=args.update_golden)
+        update_golden=args.update_golden, profile=args.profile,
+        profile_dir=args.profile_dir,
+        inject_decode_pad_s=args.inject_decode_pad)
 
 
 if __name__ == "__main__":

@@ -23,11 +23,14 @@ the paper-figure latency benchmarks.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.profiler import TraceAnnotation
 
 from benchmarks.common import save, table
 from repro.configs import get_arch
@@ -37,34 +40,76 @@ from repro.runtime.serve_loop import ServeConfig, Server
 
 KEY = jax.random.PRNGKey(0)
 
+#: TraceAnnotation names wrapping each measured phase — near-free when
+#: no profiler is active, so they always stay on; under ``perf_gate.py
+#: --profile`` they become the attribution windows ``repro.obs.profile``
+#: buckets op events into (DESIGN.md §14). Only the compiled-pipeline
+#: phases are captured — the legacy host loop and the paged A/B drive
+#: thousands of per-token dispatches that flood the profiler's host
+#: event buffer — and each phase runs in its OWN capture session
+#: (``_capture``) so one phase's op volume cannot exhaust the
+#: fixed-size buffer before a later phase's annotation lands.
+PROFILE_PHASES = ("jit_generate", "erasure_decode", "prefill")
 
-def _time_generate(server, prompts, max_new, *, runs=3):
+
+@contextlib.contextmanager
+def _capture(profile_dir, name):
+    """One ``jax.profiler`` session into ``profile_dir/name`` (no-op
+    when profiling is off). ``repro.obs.profile.summarize`` merges the
+    per-phase subdirs back into one summary."""
+    if profile_dir is None:
+        yield
+        return
+    jax.profiler.start_trace(os.path.join(profile_dir, name))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def _time_generate(server, prompts, max_new, *, runs=3, pad_s=0.0,
+                   phase="generate"):
+    """Timed generate reps; ``pad_s`` sleeps inside each timed iteration
+    — the perf gate's regression-injection hook (host-side wall-time
+    growth with flat op totals, exactly what a real dispatch stall looks
+    like to the profile diff). The ``phase`` annotation window wraps
+    ONLY the timed loop, so warmup/compile events never pollute the
+    phase's op attribution."""
     out = server.generate(prompts, max_new, key=KEY)  # warmup / compile
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for i in range(runs):
-        out = server.generate(prompts, max_new, key=jax.random.fold_in(KEY, i))
-        jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / runs
+    with TraceAnnotation(phase):
+        t0 = time.perf_counter()
+        for i in range(runs):
+            out = server.generate(
+                prompts, max_new, key=jax.random.fold_in(KEY, i)
+            )
+            jax.block_until_ready(out)
+            if pad_s > 0:
+                time.sleep(pad_s)
+        dt = (time.perf_counter() - t0) / runs
     return prompts.shape[0] * max_new / dt, dt
 
 
-def _time_decode(head, products, *, rounds=50):
-    """Per-round mask-sample + erasure-decode latency.
-
-    The host path pays a Python round-trip per round (mask to numpy,
-    ``np.linalg.solve``); the jit path is measured the way the serving
-    pipeline actually runs it — amortized inside one compiled
-    ``lax.scan`` over per-round fold_in'd keys, so per-call dispatch
-    overhead (which the pipeline eliminates) is not billed to it.
-    """
+def _time_decode_numpy(head, products, *, rounds=50):
+    """Per-round host-path decode latency: a Python round-trip per round
+    (mask to numpy, ``np.linalg.solve``). Runs OUTSIDE the profiler
+    capture — 50 rounds of per-op host dispatch flood the TraceMe
+    buffer and starve later annotation windows (see PROFILE_PHASES)."""
     keys = jax.random.split(KEY, rounds)
     t0 = time.perf_counter()
     for i in range(rounds):
         mask = head.sample_finish_mask(keys[i])
         head.decode_logits(products, mask)
-    t_np = (time.perf_counter() - t0) / rounds
+    return (time.perf_counter() - t0) / rounds
 
+
+def _time_decode_jit(head, products, *, rounds=50):
+    """Per-round jitted erasure-decode latency, measured the way the
+    serving pipeline actually runs it — amortized inside one compiled
+    ``lax.scan`` over per-round fold_in'd keys, so per-call dispatch
+    overhead (which the pipeline eliminates) is not billed to it.
+    """
+    keys = jax.random.split(KEY, rounds)
     deadline = head.deadline
 
     @jax.jit
@@ -79,13 +124,21 @@ def _time_decode(head, products, *, rounds=50):
         return acc
 
     jax.block_until_ready(scanned(products))  # compile
-    t0 = time.perf_counter()
-    jax.block_until_ready(scanned(products))
-    t_jit = (time.perf_counter() - t0) / rounds
-    return t_np, t_jit
+    with TraceAnnotation("erasure_decode"):
+        t0 = time.perf_counter()
+        jax.block_until_ready(scanned(products))
+        t_jit = (time.perf_counter() - t0) / rounds
+    return t_jit
 
 
-def run(batch=4, prompt_len=16, max_new=32, runs=3):
+def run(batch=4, prompt_len=16, max_new=32, runs=3, *,
+        decode_pad_s=0.0, profile_dir=None):
+    """Serving benchmark; ``profile_dir`` captures the compiled-pipeline
+    phases (``PROFILE_PHASES``) under ``jax.profiler.trace`` and
+    attaches a per-phase op summary (``record["profile_summary"]``) for
+    the perf gate's golden diff. ``decode_pad_s`` injects a
+    per-iteration sleep into the jit generate timing — the gate's
+    forced-regression test hook."""
     config = get_arch("qwen3-0.6b").reduced()
     model = Model(config)
     params = model.init_params(KEY)
@@ -95,37 +148,55 @@ def run(batch=4, prompt_len=16, max_new=32, runs=3):
     ).astype(jnp.int32)
 
     rows, modes = [], {}
-    for name, cfg in [
-        ("legacy", ServeConfig(block_rows=64, max_decode_steps=max_new,
-                               jit_pipeline=False)),
-        ("jit", ServeConfig(block_rows=64, max_decode_steps=max_new)),
-    ]:
+
+    def _mode(name, cfg, pad_s):
         server = Server(model, params, cluster, cfg)
-        tok_s, dt = _time_generate(server, prompts, max_new, runs=runs)
+        tok_s, dt = _time_generate(
+            server, prompts, max_new, runs=runs, pad_s=pad_s,
+            phase=f"{name}_generate",
+        )
         modes[name] = {"tokens_per_s": tok_s, "generate_s": dt,
                        "server": server}
-        rows.append({"path": name, "tokens_per_s": tok_s, "generate_s": dt})
+        rows.append({"path": name, "tokens_per_s": tok_s,
+                     "generate_s": dt})
 
-    head = modes["jit"]["server"].coded_head
-    h = jax.random.normal(KEY, (batch, config.d_model), dtype=jnp.float32)
-    products = head.worker_products(h)
-    t_np, t_jit = _time_decode(head, products)
+    # legacy runs OUTSIDE any capture (see PROFILE_PHASES)
+    _mode("legacy", ServeConfig(block_rows=64, max_decode_steps=max_new,
+                                jit_pipeline=False), 0.0)
+    with _capture(profile_dir, "generate"):
+        _mode("jit", ServeConfig(block_rows=64, max_decode_steps=max_new),
+              decode_pad_s)
 
     # per-phase split of the jit pipeline: the batched prefill is timed
     # alone (the same ``_prefill_into_cache`` program the compiled
     # generate runs), the decode share is what remains of a generate
-    # call, and the erasure solve is the scanned jit decode above. The
+    # call, and the erasure solve is the scanned jit decode below. The
     # RATIOS between phases are same-process and machine-invariant —
     # perf_gate enforces them so one phase cannot silently eat the
     # others' budget (a prefill falling back to the sequential scan
     # multiplies prefill_per_decode_token ~prompt_len-fold).
     srv = modes["jit"]["server"]
     cache0 = model.init_cache(batch, prompt_len + max_new)
-    jax.block_until_ready(srv._prefill_fn(params, cache0, prompts)[0])
-    t0 = time.perf_counter()
-    for _ in range(runs):
-        jax.block_until_ready(srv._prefill_fn(params, cache0, prompts)[0])
-    prefill_s = (time.perf_counter() - t0) / runs
+    jax.block_until_ready(  # warmup/compile, outside the capture
+        srv._prefill_fn(params, cache0, prompts)[0]
+    )
+    with _capture(profile_dir, "prefill"):
+        with TraceAnnotation("prefill"):
+            t0 = time.perf_counter()
+            for _ in range(runs):
+                jax.block_until_ready(
+                    srv._prefill_fn(params, cache0, prompts)[0]
+                )
+            prefill_s = (time.perf_counter() - t0) / runs
+
+    head = modes["jit"]["server"].coded_head
+    h = jax.random.normal(KEY, (batch, config.d_model),
+                          dtype=jnp.float32)
+    products = head.worker_products(h)
+    with _capture(profile_dir, "erasure"):
+        t_jit = _time_decode_jit(head, products)
+    # host-path decode baseline, outside the capture like the legacy loop
+    t_np = _time_decode_numpy(head, products)
     decode_per_token_s = max(
         (modes["jit"]["generate_s"] - prefill_s) / max_new, 1e-12
     )
@@ -137,7 +208,8 @@ def run(batch=4, prompt_len=16, max_new=32, runs=3):
         "erasure_share_of_decode": t_jit / decode_per_token_s,
     }
 
-    # paged/dense serving A/B (ratio golden for the perf gate)
+    # paged/dense serving A/B (ratio golden for the perf gate); outside
+    # the capture like the legacy loop (see PROFILE_PHASES)
     from benchmarks.serve_frontend import paged_dense_ab
 
     paged = paged_dense_ab(reduced=True, repeats=max(runs, 2),
@@ -161,6 +233,10 @@ def run(batch=4, prompt_len=16, max_new=32, runs=3):
         "phases": phases,
         "paged": paged,
     }
+    if profile_dir is not None:
+        from repro.obs.profile import summarize
+
+        record["profile_summary"] = summarize(profile_dir, PROFILE_PHASES)
     path = save("serve_throughput", record)
     print(table(rows, ["path", "tokens_per_s", "generate_s"]))
     print(f"tokens/s speedup (jit / legacy): {speedup:.2f}x")

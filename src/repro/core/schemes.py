@@ -40,6 +40,7 @@ from repro.core.runtime_model import (
     LatencyModel,
     resolve_latency_model,
 )
+from repro.obs.metrics import REGISTRY as _METRICS
 
 
 #: allocate() memoization (see AllocationScheme.allocate). Keys are
@@ -47,14 +48,18 @@ from repro.core.runtime_model import (
 #: so equality covers every parameter that feeds the solve.
 _ALLOC_CACHE: dict = {}
 _ALLOC_CACHE_CAP = 512
-_ALLOC_CACHE_STATS = {"hits": 0, "misses": 0}
+# hit/miss tallies live in the process-global metrics registry (§14):
+# schemes.py is module-level state with no run-scoped object to hang a
+# per-run registry on, and the controller reads totals either way
+_ALLOC_HITS = _METRICS.counter("alloc_cache_hits")
+_ALLOC_MISSES = _METRICS.counter("alloc_cache_misses")
 
 
 def allocate_cache_clear() -> None:
     """Drop all memoized allocations (tests / manual invalidation)."""
     _ALLOC_CACHE.clear()
-    _ALLOC_CACHE_STATS["hits"] = 0
-    _ALLOC_CACHE_STATS["misses"] = 0
+    _ALLOC_HITS.reset()
+    _ALLOC_MISSES.reset()
 
 
 def allocate_cache_info() -> dict:
@@ -63,8 +68,8 @@ def allocate_cache_info() -> dict:
     return {
         "size": len(_ALLOC_CACHE),
         "cap": _ALLOC_CACHE_CAP,
-        "hits": _ALLOC_CACHE_STATS["hits"],
-        "misses": _ALLOC_CACHE_STATS["misses"],
+        "hits": _ALLOC_HITS.value,
+        "misses": _ALLOC_MISSES.value,
     }
 
 
@@ -112,13 +117,13 @@ class AllocationScheme:
         cache_key = (self, cluster, int(k), allocation.fastpath_enabled())
         plan = _ALLOC_CACHE.get(cache_key)
         if plan is None:
-            _ALLOC_CACHE_STATS["misses"] += 1
+            _ALLOC_MISSES.inc()
             plan = self._allocate(cluster, k)
             if len(_ALLOC_CACHE) >= _ALLOC_CACHE_CAP:
                 _ALLOC_CACHE.pop(next(iter(_ALLOC_CACHE)))
             _ALLOC_CACHE[cache_key] = plan
         else:
-            _ALLOC_CACHE_STATS["hits"] += 1
+            _ALLOC_HITS.inc()
         # fresh array views per call: a caller mutating plan.loads must
         # not corrupt the cached solve
         return dataclasses.replace(

@@ -119,7 +119,11 @@ def main(argv=None):
                          "simulated ground truth (requires --coded)")
     ap.add_argument("--telemetry", default=None,
                     help="JSONL telemetry sink (round_timing / "
-                         "adapt_decision / request events)")
+                         "adapt_decision / request events; feed it to "
+                         "repro.launch.obsreport for the ops report)")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="export the run's spans as Chrome trace_event "
+                         "JSON (open in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
     if args.trace is not None and args.scenario is not None:
         raise SystemExit("--trace and --scenario are separate serving "
@@ -194,12 +198,35 @@ def main(argv=None):
     if args.scenario is not None:
         _serve_scenario(server, prompts, extras, args, cluster)
         return
+    tracer = _attach_tracer(server, args)
     t0 = time.perf_counter()
     out = server.generate(prompts, args.max_new, extras=extras)
     dt = time.perf_counter() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.max_new / dt:.1f} tok/s)")
     print("sample:", out[0, -args.max_new:].tolist())
+    _export_chrome(tracer, args)
+
+
+def _attach_tracer(server, args, telemetry=None):
+    """A ``SpanTracer`` on the server (and its coded executor) when
+    ``--chrome-trace`` asks for one; mirrors spans to ``telemetry``
+    when the run has a JSONL sink too."""
+    if args.chrome_trace is None:
+        return None
+    from repro.obs.trace import SpanTracer
+
+    tracer = SpanTracer(telemetry)
+    server.tracer = tracer
+    if server.coded_head is not None:
+        server.coded_head.executor.tracer = tracer
+    return tracer
+
+
+def _export_chrome(tracer, args):
+    if tracer is not None:
+        path = tracer.export_chrome(args.chrome_trace)
+        print(f"chrome trace: {path} ({len(tracer.spans)} spans)")
 
 
 def _serve_trace(server, args, config):
@@ -230,6 +257,7 @@ def _serve_trace(server, args, config):
         print(f"slots auto -> {slots} "
               f"(coverage latency {controller.coverage_latency():.4f})")
     with Telemetry(args.telemetry) as tel:
+        tracer = _attach_tracer(server, args, telemetry=tel)
         clock = None
         if args.measure_times:
             from repro.runtime.timing import RoundClock
@@ -238,10 +266,11 @@ def _serve_trace(server, args, config):
         rep = server.serve(
             trace, slots=slots,
             admission_threshold=args.admission_threshold,
-            telemetry=tel, clock=clock,
+            telemetry=tel, clock=clock, tracer=tracer,
             paged=not args.dense_kv, block_len=args.block_len,
             num_blocks=args.num_blocks, prefill_chunk=args.prefill_chunk,
         )
+    _export_chrome(tracer, args)
     if clock is not None:
         unit = "-" if clock.unit_s is None else f"{clock.unit_s:.3e}"
         print(f"measured: {clock.fed}/{clock.rounds} rounds fed, "
@@ -283,6 +312,7 @@ def _serve_scenario(server, prompts, extras, args, cluster):
     trace = spec.trace(cluster, seed=0)
     head = server.coded_head
     tel = Telemetry(args.telemetry)
+    tracer = _attach_tracer(server, args, telemetry=tel)
     controller = None
     if args.adapt_every is not None:
         controller = AdaptiveController(
@@ -346,6 +376,7 @@ def _serve_scenario(server, prompts, extras, args, cluster):
         print(f"controller: {len(controller.decisions)} decisions, "
               f"{len(replans)} replans at rounds "
               f"{[d.round for d in replans]}")
+    _export_chrome(tracer, args)
     tel.close()
 
 

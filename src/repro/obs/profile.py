@@ -1,0 +1,217 @@
+"""XLA chrome-trace summarization for the perf gate (DESIGN.md §14).
+
+``jax.profiler.trace(dir)`` writes a gzipped Chrome ``trace_event``
+JSON under ``<dir>/plugins/profile/<ts>/<host>.trace.json.gz``. This
+module turns that capture into *attribution*:
+
+* the benchmark wraps each measured phase in a
+  ``jax.profiler.TraceAnnotation`` (near-free when no profiler is
+  active, so the annotations always stay on), which lands in the trace
+  as a complete (``ph == "X"``) event whose ``[ts, ts + dur]`` window
+  encloses that phase's op events;
+* ``summarize`` buckets every op event into the phase window containing
+  its midpoint and aggregates per-phase wall time plus top-K op totals;
+* ``diff_summaries`` compares a fresh summary against the golden one
+  committed with the gate baseline, names the phase with the worst
+  wall-time ratio, and tabulates its op-level deltas — so a failing
+  gate row says *which phase regressed and what the ops were doing*,
+  not just that a ratio moved.
+
+Stdlib-only parsing (``gzip`` + ``json``): no profiler-analysis deps.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+__all__ = ["find_trace_file", "find_trace_files", "load_trace_events",
+           "summarize", "diff_summaries", "format_diff", "TOP_K"]
+
+#: ops kept per phase in summaries and diffs
+TOP_K = 5
+
+
+def find_trace_files(profile_dir: str) -> list[str]:
+    """Every ``*.trace.json.gz`` under a profile dir, sorted by mtime.
+
+    Benchmarks capture each phase in its OWN ``jax.profiler`` session
+    (written to a per-phase subdir) because the profiler's host event
+    buffer is fixed-size — one long session drops the later annotation
+    windows. Summaries therefore merge all captures under the dir.
+    """
+    hits = glob.glob(os.path.join(
+        profile_dir, "**", "plugins", "profile", "*", "*.trace.json.gz"
+    ), recursive=True)
+    return sorted(hits, key=os.path.getmtime)
+
+
+def find_trace_file(profile_dir: str) -> str | None:
+    """Newest ``*.trace.json.gz`` under a ``jax.profiler.trace`` dir."""
+    hits = find_trace_files(profile_dir)
+    return hits[-1] if hits else None
+
+
+def load_trace_events(trace_path: str) -> list[dict]:
+    """The ``traceEvents`` list of a (gzipped) Chrome trace JSON."""
+    opener = gzip.open if trace_path.endswith(".gz") else open
+    with opener(trace_path, "rt") as f:
+        doc = json.load(f)
+    return doc.get("traceEvents", [])
+
+
+def _is_phase(name: str, phase: str) -> bool:
+    # TraceAnnotation names may carry a '#metadata#' suffix in XLA traces
+    return name == phase or name.startswith(phase + "#")
+
+
+def _summarize_events(events: list[dict], phases, out: dict) -> None:
+    """Fold one trace's events into the accumulating per-phase summary.
+
+    Timestamps are only compared WITHIN a trace (windows vs midpoints),
+    so merging captures with different time bases is sound.
+    """
+    windows: dict[str, list[tuple[float, float]]] = {p: [] for p in phases}
+    ops = []
+    for e in events:
+        if e.get("ph") != "X" or e.get("dur") is None:
+            continue
+        name = e.get("name", "")
+        for p in phases:
+            if _is_phase(name, p):
+                windows[p].append((e["ts"], e["ts"] + e["dur"]))
+                break
+        else:
+            ops.append(e)
+
+    for p, wins in windows.items():
+        if not wins:
+            continue
+        summ = out.setdefault(p, {
+            "wall_us": 0.0, "op_total_us": 0.0, "n_ops": 0, "ops": {},
+        })
+        summ["wall_us"] += sum(hi - lo for lo, hi in wins)
+    for e in ops:
+        mid = e["ts"] + e["dur"] / 2.0
+        for p, wins in windows.items():
+            if wins and any(lo <= mid <= hi for lo, hi in wins):
+                summ = out[p]
+                summ["op_total_us"] += e["dur"]
+                summ["n_ops"] += 1
+                agg = summ["ops"].setdefault(
+                    e["name"], {"total_us": 0.0, "count": 0}
+                )
+                agg["total_us"] += e["dur"]
+                agg["count"] += 1
+
+
+def summarize(profile_dir: str, phases, *, top_k: int = TOP_K) -> dict:
+    """Per-phase wall time + top-K op totals from profiler captures.
+
+    Returns ``{phase: {"wall_us", "op_total_us", "n_ops", "ops":
+    [{"name", "total_us", "count"}, ...]}}`` for every phase whose
+    annotation appears in ANY trace under ``profile_dir`` (benchmarks
+    write one capture session per phase — see ``find_trace_files``).
+    Op events (any non-annotation ``ph == "X"`` event with a duration)
+    are attributed to the phase window containing their midpoint; XLA
+    traces nest events across threads, so totals are an attribution
+    signal consistent between golden and fresh captures, not an
+    exclusive wall-time decomposition.
+    """
+    trace_paths = find_trace_files(profile_dir)
+    if not trace_paths:
+        raise FileNotFoundError(
+            f"no profiler capture (*.trace.json.gz) under {profile_dir}"
+        )
+    out: dict[str, dict] = {}
+    for trace_path in trace_paths:
+        _summarize_events(load_trace_events(trace_path), phases, out)
+    for summ in out.values():
+        summ["ops"] = [
+            {"name": n, **v}
+            for n, v in sorted(
+                summ["ops"].items(),
+                key=lambda kv: kv[1]["total_us"],
+                reverse=True,
+            )[:top_k]
+        ]
+    return out
+
+
+def diff_summaries(measured: dict, golden: dict, *,
+                   top_k: int = TOP_K) -> dict:
+    """Compare a fresh phase summary against the golden one.
+
+    Returns ``{"phases": {phase: {"wall_ratio", "measured_wall_us",
+    "golden_wall_us"}}, "worst_phase", "worst_ratio", "worst_ops":
+    [{"name", "measured_us", "golden_us", "ratio"}, ...]}`` over the
+    phases present in both summaries; ``worst_phase`` is the one whose
+    wall time grew the most relative to golden.
+    """
+    shared = sorted(set(measured) & set(golden))
+    phases = {}
+    for p in shared:
+        m, g = measured[p]["wall_us"], golden[p]["wall_us"]
+        phases[p] = {
+            "wall_ratio": (m / g) if g > 0 else float("inf"),
+            "measured_wall_us": m,
+            "golden_wall_us": g,
+        }
+    if not phases:
+        return {"phases": {}, "worst_phase": None, "worst_ratio": None,
+                "worst_ops": []}
+    worst = max(phases, key=lambda p: phases[p]["wall_ratio"])
+    m_ops = {o["name"]: o for o in measured[worst].get("ops", [])}
+    g_ops = {o["name"]: o for o in golden[worst].get("ops", [])}
+    rows = []
+    for name in sorted(set(m_ops) | set(g_ops)):
+        mu = m_ops.get(name, {}).get("total_us", 0.0)
+        gu = g_ops.get(name, {}).get("total_us", 0.0)
+        rows.append({
+            "name": name,
+            "measured_us": mu,
+            "golden_us": gu,
+            "ratio": (mu / gu) if gu > 0 else float("inf"),
+        })
+    rows.sort(key=lambda r: max(r["measured_us"], r["golden_us"]),
+              reverse=True)
+    return {
+        "phases": phases,
+        "worst_phase": worst,
+        "worst_ratio": phases[worst]["wall_ratio"],
+        "worst_ops": rows[:top_k],
+    }
+
+
+def format_diff(diff: dict) -> str:
+    """Human-readable rendering of a ``diff_summaries`` result."""
+    if not diff.get("phases"):
+        return "profile diff: no shared phases between capture and golden"
+    lines = ["profile attribution (phase wall time vs golden):"]
+    for p, row in sorted(diff["phases"].items(),
+                         key=lambda kv: kv[1]["wall_ratio"],
+                         reverse=True):
+        mark = "  <-- regressed" if p == diff["worst_phase"] else ""
+        lines.append(
+            f"  {p:<16s} {row['measured_wall_us'] / 1e3:10.2f} ms vs "
+            f"{row['golden_wall_us'] / 1e3:10.2f} ms  "
+            f"(x{row['wall_ratio']:.2f}){mark}"
+        )
+    lines.append(
+        f"top ops in regressed phase '{diff['worst_phase']}' "
+        f"(measured vs golden, us):"
+    )
+    for o in diff["worst_ops"]:
+        ratio = ("inf" if o["ratio"] == float("inf")
+                 else f"{o['ratio']:.2f}")
+        lines.append(
+            f"  {o['name'][:48]:<48s} {o['measured_us']:10.0f} vs "
+            f"{o['golden_us']:10.0f}  (x{ratio})"
+        )
+    if not diff["worst_ops"]:
+        lines.append(
+            "  (no ops attributed — wall-time growth is host-side: "
+            "sleeps, Python overhead, or dispatch gaps)"
+        )
+    return "\n".join(lines)

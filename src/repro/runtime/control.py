@@ -41,6 +41,7 @@ from repro.core.runtime_model import (
     comm_terms,
 )
 from repro.core.schemes import AllocationScheme, allocate_cache_info
+from repro.obs.trace import NULL_TRACER
 
 
 def coverage_latency(
@@ -482,26 +483,31 @@ class AdaptiveController:
         a true bucket miss is charged ``cfg.replan_cost``. Without
         bucketing every replan recompiles, so every replan is charged.
         """
-        est = self.estimated_cluster()
-        probe = getattr(self.executor, "bucket_probe", lambda _c: None)(est)
-        cost = 0.0 if probe else self.cfg.replan_cost
-        d = replan_decision(
-            self.executor.scheme,
-            self.executor.plan,
-            est,
-            threshold=self.cfg.threshold,
-            replan_cost=cost,
-            horizon=self.cfg.horizon,
-            round=self.round,
-        )
-        if d.replanned:
-            self.executor.replan(est)
-            self.tracker.rebind(self.executor.cluster)
-            self._membership = tuple(
-                g.num_workers for g in self.executor.cluster.groups
+        # share the executor's tracer (§14): the replan span the
+        # executor records nests under this decision span
+        tracer = getattr(self.executor, "tracer", NULL_TRACER)
+        with tracer.span("adapt_update", round=self.round) as sp:
+            est = self.estimated_cluster()
+            probe = getattr(self.executor, "bucket_probe", lambda _c: None)(est)
+            cost = 0.0 if probe else self.cfg.replan_cost
+            d = replan_decision(
+                self.executor.scheme,
+                self.executor.plan,
+                est,
+                threshold=self.cfg.threshold,
+                replan_cost=cost,
+                horizon=self.cfg.horizon,
+                round=self.round,
             )
-            if self.on_replan is not None:
-                self.on_replan()
+            if d.replanned:
+                self.executor.replan(est)
+                self.tracker.rebind(self.executor.cluster)
+                self._membership = tuple(
+                    g.num_workers for g in self.executor.cluster.groups
+                )
+                if self.on_replan is not None:
+                    self.on_replan()
+            sp.set(replanned=d.replanned, reason=d.reason)
         self.decisions.append(d)
         if self.telemetry is not None:
             self.telemetry.event(

@@ -41,6 +41,7 @@ from repro.core.runtime_model import (
     sample_worker_times,
 )
 from repro.core.schemes import AllocationScheme
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.plan_bucket import (
     BucketConfig,
     PlanBucketSet,
@@ -82,6 +83,7 @@ class CodedRoundExecutor:
         deadline_safety: float = 3.0,
         bucket_config: BucketConfig | None = None,
         telemetry=None,
+        tracer=None,
     ):
         self.engine = CodedComputeEngine(
             cluster, k, scheme, scheme_params=scheme_params
@@ -89,6 +91,9 @@ class CodedRoundExecutor:
         self.deadline_safety = float(deadline_safety)
         self.bucket_config = bucket_config
         self.telemetry = telemetry
+        #: span tracer (§14); the owning loop shares its tracer so
+        #: ``replan``/``bucket_switch`` spans nest under loop spans
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         #: admitted bucket branches (None = bucketing off)
         self.buckets: PlanBucketSet | None = None
         #: row of ``buckets`` the current plan lives in
@@ -450,34 +455,43 @@ class CodedRoundExecutor:
         (``last_replan_structural`` False): compiled bucket-switch
         programs keep running with zero retraces.
         """
-        self.engine.replan(new_cluster)
-        if self.bucket_config is None:
-            self._refresh()
-            self.last_replan_structural = True
+        with self.tracer.span("replan") as sp:
+            self.engine.replan(new_cluster)
+            if self.bucket_config is None:
+                self._refresh()
+                self.last_replan_structural = True
+                sp.set(structural=True, workers=self.plan.num_workers)
+                return self.plan
+            qplan = quantize_plan(
+                self.engine.plan, self.bucket_config.quantum
+            )
+            structural = (
+                self.buckets is None
+                or qplan.num_workers != self.buckets.num_workers
+                or qplan.n > self.buckets.n_cap
+            )
+            if structural:
+                self._refresh()
+                self.last_replan_structural = True
+                self.last_bucket_hit = False
+                self._emit_bucket_event(hit=False, structural=True)
+                sp.set(structural=True, workers=self.plan.num_workers)
+                return self.plan
+            with self.tracer.span("bucket_switch") as bsp:
+                self._bind_plan(qplan)
+                sig = bucket_signature(
+                    qplan.cluster, qplan.allocation.loads_int, self.k
+                )
+                self.active_bucket, hit = self.buckets.admit(
+                    sig, qplan, self.deadline, *self.worker_params
+                )
+                self.last_replan_structural = False
+                self.last_bucket_hit = hit
+                self._emit_bucket_event(hit=hit, structural=False)
+                bsp.set(hit=hit, bucket=self.active_bucket)
+            sp.set(structural=False, hit=hit,
+                   workers=self.plan.num_workers)
             return self.plan
-        qplan = quantize_plan(self.engine.plan, self.bucket_config.quantum)
-        structural = (
-            self.buckets is None
-            or qplan.num_workers != self.buckets.num_workers
-            or qplan.n > self.buckets.n_cap
-        )
-        if structural:
-            self._refresh()
-            self.last_replan_structural = True
-            self.last_bucket_hit = False
-            self._emit_bucket_event(hit=False, structural=True)
-            return self.plan
-        self._bind_plan(qplan)
-        sig = bucket_signature(
-            qplan.cluster, qplan.allocation.loads_int, self.k
-        )
-        self.active_bucket, hit = self.buckets.admit(
-            sig, qplan, self.deadline, *self.worker_params
-        )
-        self.last_replan_structural = False
-        self.last_bucket_hit = hit
-        self._emit_bucket_event(hit=hit, structural=False)
-        return self.plan
 
     def on_estimates_update(self, tracker) -> DeploymentPlan:
         """Replan from a ``StragglerTracker``'s current estimated cluster."""

@@ -45,6 +45,8 @@ from repro.core.planner import DeploymentPlan
 from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import AllocationScheme
 from repro.models.model import DTYPES_LOGITS, Model, padded_vocab
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, SpanTracer
 from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.plan_bucket import BucketConfig
 
@@ -352,6 +354,9 @@ class Server:
         self._prefill_fn = jax.jit(self._prefill_into_cache)
         self.traces = 0
         self.serve_traces = 0
+        #: span tracer (§14); ``serve(tracer=...)`` rebinds it, and the
+        #: no-op default keeps the untraced hot path allocation-free
+        self.tracer = NULL_TRACER
         #: optional ground-truth (mus_w, alphas_w, shift_w) the next
         #: generate call samples straggling from (scenario closed loop)
         self._true_params = None
@@ -747,7 +752,8 @@ class Server:
               controller=None, round_latency=None, telemetry=None,
               clock=None, key=None, paged: bool | None = None,
               block_len: int | None = None, num_blocks: int | None = None,
-              prefill_chunk: int | None = None) -> ServeReport:
+              prefill_chunk: int | None = None,
+              tracer=None) -> ServeReport:
         """Continuous batching: serve a request trace through S slots.
 
         ``trace``: iterable of ``serve.workload.Request`` (arrivals in
@@ -789,6 +795,18 @@ class Server:
 
         if clock is not None and self.coded_head is None:
             raise ValueError("clock (measured serving) requires a coded head")
+
+        # span tracing (§14): a telemetry sink implies spans on its
+        # stream; an explicit tracer wins; neither means the shared
+        # no-op (zero-allocation hot path)
+        if tracer is None:
+            tracer = (
+                SpanTracer(telemetry) if telemetry is not None
+                else NULL_TRACER
+            )
+        self.tracer = tracer
+        if self.coded_head is not None:
+            self.coded_head.executor.tracer = tracer
 
         paged = self.cfg.paged if paged is None else paged
         trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
@@ -834,7 +852,7 @@ class Server:
             slots, queue_cap=queue_cap,
             admission_threshold=admission_threshold,
             round_latency=round_latency, reference_latency=reference,
-            telemetry=telemetry,
+            telemetry=telemetry, metrics=MetricsRegistry(),
         )
         key = key if key is not None else jax.random.PRNGKey(0)
         deadline = jnp.float32(
@@ -862,23 +880,25 @@ class Server:
         no_rows = jnp.full((slots,), -1, jnp.int32)
         t0 = time.perf_counter()
         while i < len(trace) or not sched.idle:
-            while i < len(trace) and trace[i].arrival <= now + 1e-9:
-                sched.offer(trace[i], now)
-                i += 1
-            placed = sched.fill_slots(now)
-            if placed:
-                prompts_np = np.zeros((slots, prompt_cap), np.int32)
-                lengths_np = np.zeros((slots,), np.int32)
-                rows_np = np.full((slots,), -1, np.int32)
-                for r, (si, req) in enumerate(placed):
-                    prompts_np[r, : req.prompt_len] = req.prompt
-                    lengths_np[r] = req.prompt_len
-                    rows_np[si] = r
-                prompts = jnp.asarray(prompts_np)
-                lengths = jnp.asarray(lengths_np)
-                rows = jnp.asarray(rows_np)
-            else:
-                prompts, lengths, rows = no_prompts, no_lengths, no_rows
+            with tracer.span("admit", round=now) as asp:
+                while i < len(trace) and trace[i].arrival <= now + 1e-9:
+                    sched.offer(trace[i], now)
+                    i += 1
+                placed = sched.fill_slots(now)
+                asp.set(placed=len(placed))
+                if placed:
+                    prompts_np = np.zeros((slots, prompt_cap), np.int32)
+                    lengths_np = np.zeros((slots,), np.int32)
+                    rows_np = np.full((slots,), -1, np.int32)
+                    for r, (si, req) in enumerate(placed):
+                        prompts_np[r, : req.prompt_len] = req.prompt
+                        lengths_np[r] = req.prompt_len
+                        rows_np[si] = r
+                    prompts = jnp.asarray(prompts_np)
+                    lengths = jnp.asarray(lengths_np)
+                    rows = jnp.asarray(rows_np)
+                else:
+                    prompts, lengths, rows = no_prompts, no_lengths, no_rows
             active = [s.busy and not s.done for s in sched.slots]
             if any(active):
                 # chunk exactly to the next finish event: slots free the
@@ -900,34 +920,40 @@ class Server:
                     )
                     bucket_args = self._bucket_args()
                 skey = jax.random.fold_in(key, call)
-                if clock is None:
-                    cache, logits, pos, _ = self._serve_step_fn(
-                        self.params, cache, logits, pos, prompts, lengths,
-                        rows, jnp.asarray(active), skey, deadline,
-                        true_params, bucket_args, steps=steps,
-                    )
-                else:
-                    timing = clock.measure(
-                        lambda: self._serve_step_fn(
-                            self.params, cache, logits, pos, prompts,
-                            lengths, rows, jnp.asarray(active), skey,
-                            deadline, true_params, bucket_args,
-                            steps=steps,
-                        ),
-                        key=skey,
-                        true_cluster=self._true_cluster,
-                    )
-                    cache, logits, pos, _ = timing.result
-                    if controller is not None:
-                        d = controller.observe_timing(timing)
-                        if (
-                            d is not None and d.replanned
-                            and self.coded_head
-                                .executor.last_replan_structural
-                        ):
-                            # next dispatch retraces the re-jitted
-                            # program: compile, not round latency
-                            clock.discard_next()
+                with tracer.span("decode_chunk", steps=steps,
+                                 round=now, placed=len(placed)):
+                    if clock is None:
+                        with tracer.span("dispatch"):
+                            cache, logits, pos, _ = self._serve_step_fn(
+                                self.params, cache, logits, pos, prompts,
+                                lengths, rows, jnp.asarray(active), skey,
+                                deadline, true_params, bucket_args,
+                                steps=steps,
+                            )
+                    else:
+                        with tracer.span("dispatch"):
+                            timing = clock.measure(
+                                lambda: self._serve_step_fn(
+                                    self.params, cache, logits, pos,
+                                    prompts, lengths, rows,
+                                    jnp.asarray(active), skey, deadline,
+                                    true_params, bucket_args,
+                                    steps=steps,
+                                ),
+                                key=skey,
+                                true_cluster=self._true_cluster,
+                            )
+                        cache, logits, pos, _ = timing.result
+                        if controller is not None:
+                            d = controller.observe_timing(timing)
+                            if (
+                                d is not None and d.replanned
+                                and self.coded_head
+                                    .executor.last_replan_structural
+                            ):
+                                # next dispatch retraces the re-jitted
+                                # program: compile, not round latency
+                                clock.discard_next()
                 call += 1
                 if placed:  # the fused admit pass costs its own round
                     now += 1.0
@@ -942,7 +968,7 @@ class Server:
                 break
         jax.block_until_ready(logits)
         wall = time.perf_counter() - t0
-        return ServeReport(
+        report = ServeReport(
             finished=tuple(sched.finished),
             tokens=sum(
                 f.tokens for f in sched.finished if f.outcome == "done"
@@ -954,6 +980,8 @@ class Server:
             shed=sched.shed,
             wall_s=wall,
         )
+        sched.metrics.emit(telemetry, phase="serve", rounds=float(now))
+        return report
 
     def _serve_paged(self, trace, *, slots, prompt_cap, max_out,
                      decode_block, queue_cap, admission_threshold,
@@ -987,14 +1015,18 @@ class Server:
         cache = self.model.init_paged_cache(nb, bl)
         kv = cache["kv"]
         bytes_per_block = (kv["k"].nbytes + kv["v"].nbytes) // (nb + 1)
+        tracer = self.tracer  # resolved by serve()
+        # one registry for pool + scheduler: the run snapshots as a unit
+        metrics = MetricsRegistry()
         pool = BlockPool(
             nb, bl, bytes_per_block=bytes_per_block, telemetry=telemetry,
+            metrics=metrics,
         )
         sched = SlotScheduler(
             slots, queue_cap=queue_cap,
             admission_threshold=admission_threshold,
             round_latency=round_latency, reference_latency=reference,
-            telemetry=telemetry, pool=pool, chunk=chunk,
+            telemetry=telemetry, pool=pool, chunk=chunk, metrics=metrics,
         )
         key = key if key is not None else jax.random.PRNGKey(0)
         deadline = jnp.float32(
@@ -1024,14 +1056,16 @@ class Server:
         prefill_rounds = decode_rounds = 0
         t0 = time.perf_counter()
         while i < len(trace) or not sched.idle:
-            while i < len(trace) and trace[i].arrival <= now + 1e-9:
-                sched.offer(trace[i], now)
-                i += 1
-            placed = sched.fill_slots(now)
-            for si, _req in placed:
-                blocks = sched.slots[si].blocks
-                table_np[si, :] = -1
-                table_np[si, : len(blocks)] = blocks
+            with tracer.span("admit", round=now) as asp:
+                while i < len(trace) and trace[i].arrival <= now + 1e-9:
+                    sched.offer(trace[i], now)
+                    i += 1
+                placed = sched.fill_slots(now)
+                asp.set(placed=len(placed))
+                for si, _req in placed:
+                    blocks = sched.slots[si].blocks
+                    table_np[si, :] = -1
+                    table_np[si, : len(blocks)] = blocks
             # this round's prefill chunk: the next `chunk` unconsumed
             # prompt tokens of EVERY slot still mid-prompt (fresh admits
             # included) — one batched pass covers them all
@@ -1089,24 +1123,36 @@ class Server:
                     jnp.asarray(table_np), jnp.asarray(active), skey,
                     deadline, true_params, bucket_args,
                 )
-                if clock is None:
-                    cache, logits, pos, _ = self._serve_step_paged_fn(
-                        *args, steps=steps
-                    )
-                else:
-                    timing = clock.measure(
-                        lambda: self._serve_step_paged_fn(*args, steps=steps),
-                        key=skey, true_cluster=self._true_cluster,
-                    )
-                    cache, logits, pos, _ = timing.result
-                    if controller is not None:
-                        d = controller.observe_timing(timing)
-                        if (
-                            d is not None and d.replanned
-                            and self.coded_head
-                                .executor.last_replan_structural
-                        ):
-                            clock.discard_next()
+                # a round that splices prompt chunks is a prefill round
+                # even when finishing slots decode in the same dispatch
+                with tracer.span(
+                    "prefill_chunk" if prefilling else "decode_chunk",
+                    steps=steps, round=now, placed=len(placed),
+                ):
+                    if clock is None:
+                        with tracer.span("dispatch"):
+                            cache, logits, pos, _ = (
+                                self._serve_step_paged_fn(
+                                    *args, steps=steps
+                                )
+                            )
+                    else:
+                        with tracer.span("dispatch"):
+                            timing = clock.measure(
+                                lambda: self._serve_step_paged_fn(
+                                    *args, steps=steps
+                                ),
+                                key=skey, true_cluster=self._true_cluster,
+                            )
+                        cache, logits, pos, _ = timing.result
+                        if controller is not None:
+                            d = controller.observe_timing(timing)
+                            if (
+                                d is not None and d.replanned
+                                and self.coded_head
+                                    .executor.last_replan_structural
+                            ):
+                                clock.discard_next()
                 call += 1
                 for si, take in notes:
                     sched.note_prefill(si, take)
@@ -1125,7 +1171,7 @@ class Server:
                 break
         jax.block_until_ready(logits)
         wall = time.perf_counter() - t0
-        return ServeReport(
+        report = ServeReport(
             finished=tuple(sched.finished),
             tokens=sum(
                 f.tokens for f in sched.finished if f.outcome == "done"
@@ -1137,6 +1183,8 @@ class Server:
             shed=sched.shed,
             wall_s=wall,
         )
+        metrics.emit(telemetry, phase="serve", rounds=float(now))
+        return report
 
     # ------------------------------------------------------------ public
     def generate(self, prompts, max_new: int | None = None, *, key=None,
@@ -1164,10 +1212,12 @@ class Server:
                 if self._true_params is not None
                 else self.coded_head.executor.worker_params
             )
-        return self._generate_fn(
-            self.params, cache, jnp.asarray(prompts, jnp.int32), key,
-            deadline, true_params, self._bucket_args(), max_new=max_new,
-        )
+        with self.tracer.span("dispatch", kind="generate",
+                              max_new=max_new, batch=b):
+            return self._generate_fn(
+                self.params, cache, jnp.asarray(prompts, jnp.int32), key,
+                deadline, true_params, self._bucket_args(), max_new=max_new,
+            )
 
     # ------------------------------------------------- legacy host loop
     def _generate_hostloop(self, prompts, max_new, key, cache):
@@ -1207,16 +1257,18 @@ class Server:
         """Recompute the final logits through the coded LM head (host path)."""
         head = self.coded_head
         vocab = self.model.config.vocab_size
-        ids = np.arange(fallback_logits.shape[-1])
-        lf = np.asarray(fallback_logits, np.float32)
-        clean = np.where(ids[None, :] < vocab, lf, 0.0)
-        products = head.encode_logits(
-            jnp.asarray(clean), use_kernel=self.cfg.use_kernel
-        )
-        mask = head.sample_finish_mask(jax.random.fold_in(key, step))
-        logits, ok = head.decode_logits(products, mask)
-        if not ok:  # insufficient survivors: fall back (and a real system
-            return fallback_logits  # would extend the deadline)
-        logits = logits[:, : fallback_logits.shape[-1]]
-        logits = np.where(ids[None, :] < vocab, logits, NEG_INF)
-        return jnp.asarray(logits)
+        with self.tracer.span("erasure_solve", step=step) as sp:
+            ids = np.arange(fallback_logits.shape[-1])
+            lf = np.asarray(fallback_logits, np.float32)
+            clean = np.where(ids[None, :] < vocab, lf, 0.0)
+            products = head.encode_logits(
+                jnp.asarray(clean), use_kernel=self.cfg.use_kernel
+            )
+            mask = head.sample_finish_mask(jax.random.fold_in(key, step))
+            logits, ok = head.decode_logits(products, mask)
+            sp.set(ok=bool(ok))
+            if not ok:  # insufficient survivors: fall back (a real
+                return fallback_logits  # system would extend the deadline)
+            logits = logits[:, : fallback_logits.shape[-1]]
+            logits = np.where(ids[None, :] < vocab, logits, NEG_INF)
+            return jnp.asarray(logits)

@@ -9,27 +9,40 @@ deterministically (tests create sinks in tempfiles)::
 
 Besides per-step metric records, the runtime surfaces discrete
 *events* (degraded aggregation, replans, adaptive-controller decisions,
-deadline misses) through ``event``; they land in the same JSONL stream
-tagged with an ``event`` field and are kept in memory for
-tests/operators to inspect. Every event record carries a monotonic
-``t`` sequence number (0, 1, 2, ... per sink), so interleaved control
-decisions are totally ordered and post-hoc analyzable even when wall
-clocks are useless (simulated rounds) — see DESIGN.md §8 for the event
-schema.
+deadline misses, spans from ``repro.obs.trace``) through ``event``; they
+land in the same JSONL stream tagged with an ``event`` field and are
+kept in memory for tests/operators to inspect. Every event record
+carries a monotonic ``t`` sequence number (0, 1, 2, ... per sink), so
+interleaved control decisions are totally ordered and post-hoc
+analyzable even when wall clocks are useless (simulated rounds), plus a
+``wall_s`` ``perf_counter`` stamp so events interleave with spans on a
+real timeline — see DESIGN.md §8 for the event schema (generated from
+``repro.obs.schema``).
+
+Long-running sinks bound their in-memory footprint with ``max_events``
+(a ring buffer over ``events``); the JSONL sink always stays complete.
 """
 from __future__ import annotations
 
 import json
 import time
+from collections import deque
 
 
 class Telemetry:
-    def __init__(self, path: str | None = None, ema: float = 0.9):
+    def __init__(self, path: str | None = None, ema: float = 0.9,
+                 max_events: int | None = None):
+        if max_events is not None and max_events <= 0:
+            raise ValueError(f"max_events must be > 0, got {max_events}")
         self.path = path
         self.ema = ema
         self.step_time: float | None = None
         self._last: float | None = None
-        self.events: list[dict] = []
+        #: in-memory event window; a deque ring when ``max_events`` is
+        #: set (the JSONL file keeps every record regardless)
+        self.events = (
+            deque(maxlen=max_events) if max_events is not None else []
+        )
         self._event_t = 0  # monotonic event sequence number
         self._fh = open(path, "a") if path else None
 
@@ -46,7 +59,15 @@ class Telemetry:
         return self.step_time
 
     def log(self, step: int, metrics: dict, tokens_per_step: int | None = None):
-        rec = {"step": step, **{k: float(v) for k, v in metrics.items()}}
+        # non-float-able metric values (a status string, a scheme name)
+        # are kept as strings instead of raising mid-run: a telemetry
+        # sink must never be the thing that kills a training job
+        rec = {"step": step}
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = str(v)
         # explicit None checks: truthiness would silently drop tokens_per_s
         # when tokens_per_step == 0 (a valid rate of 0.0) or when the
         # smoothed step time is exactly 0.0 (report inf, not nothing)
@@ -61,11 +82,19 @@ class Telemetry:
     def event(self, name: str, **fields) -> dict:
         """Record a discrete runtime event (degraded step, replan, ...).
 
-        Stamps a monotonic ``t`` (per-sink sequence number) unless the
-        caller provides its own — consumers that already carry a round
-        index still get total ordering for free via the default.
+        Stamps a monotonic ``t`` (per-sink sequence number) and a
+        ``wall_s`` ``perf_counter`` stamp unless the caller provides its
+        own — consumers that already carry a round index (or, like
+        ``round_timing``, a measured wall duration) keep their fields;
+        everyone else gets total ordering and a real-time anchor for
+        free.
         """
-        rec = {"event": name, "t": self._event_t, **fields}
+        rec = {
+            "event": name,
+            "t": self._event_t,
+            "wall_s": time.perf_counter(),
+            **fields,
+        }
         self._event_t += 1
         self.events.append(rec)
         self._write(rec)

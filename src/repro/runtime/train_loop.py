@@ -41,6 +41,8 @@ from repro.core.gradient_coding import assignment_matrix, decode_vector_jit
 from repro.core.runtime_model import ClusterSpec
 from repro.core.schemes import AllocationScheme
 from repro.models.model import Model
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import SpanTracer
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.runtime.executor import CodedRoundExecutor
 from repro.runtime.plan_bucket import BucketConfig
@@ -111,6 +113,9 @@ class TrainConfig:
     checkpoint_every: int = 50
     log_every: int = 10
     telemetry_path: str | None = None
+    #: bound the in-memory event window (ring buffer); the JSONL sink
+    #: at ``telemetry_path`` stays complete regardless
+    telemetry_max_events: int | None = None
     seed: int = 0
     # ---- coded execution (gradient coding on the shared substrate) ----
     #: straggler fleet to plan against; None = plain (uncoded) training
@@ -340,7 +345,12 @@ class Trainer:
             raise ValueError(
                 f"adapt_every must be a positive cadence, got {cfg.adapt_every}"
             )
-        self.telemetry = Telemetry(cfg.telemetry_path)
+        self.telemetry = Telemetry(
+            cfg.telemetry_path, max_events=cfg.telemetry_max_events
+        )
+        #: span tracer (§14): per-step dispatch spans, shared with the
+        #: executor so replan/bucket-switch spans nest on the same stack
+        self.tracer = SpanTracer(self.telemetry)
         self._ckpt = (
             AsyncCheckpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
         )
@@ -356,6 +366,7 @@ class Trainer:
                 deadline_safety=cfg.deadline_safety,
                 bucket_config=cfg.bucket_config(),
                 telemetry=self.telemetry,
+                tracer=self.tracer,
             )
             self._build_coded_step()
             if cfg.scenario is not None:
@@ -505,18 +516,19 @@ class Trainer:
                     # wall-clock times — same key as the compiled step's
                     # finish mask, so the split matches the draw that
                     # actually gated the round
-                    timing = self.clock.measure(
-                        lambda: self.coded_step_fn(
-                            params, opt_state, batch, skey,
-                            jnp.float32(self.executor.deadline),
-                            true_params, bucket_args,
-                        ),
-                        key=skey,
-                        true_cluster=(
-                            self.trace.at(step)
-                            if self.trace is not None else None
-                        ),
-                    )
+                    with self.tracer.span("dispatch", step=step):
+                        timing = self.clock.measure(
+                            lambda: self.coded_step_fn(
+                                params, opt_state, batch, skey,
+                                jnp.float32(self.executor.deadline),
+                                true_params, bucket_args,
+                            ),
+                            key=skey,
+                            true_cluster=(
+                                self.trace.at(step)
+                                if self.trace is not None else None
+                            ),
+                        )
                     params, opt_state, metrics = timing.result
                     if self.controller is not None:
                         d = self.controller.observe_timing(timing)
@@ -528,11 +540,12 @@ class Trainer:
                             # step: compile time, not round latency
                             self.clock.discard_next()
                 else:
-                    params, opt_state, metrics = self.coded_step_fn(
-                        params, opt_state, batch, skey,
-                        jnp.float32(self.executor.deadline),
-                        true_params, bucket_args,
-                    )
+                    with self.tracer.span("dispatch", step=step):
+                        params, opt_state, metrics = self.coded_step_fn(
+                            params, opt_state, batch, skey,
+                            jnp.float32(self.executor.deadline),
+                            true_params, bucket_args,
+                        )
                     if self.controller is not None:
                         # the controller observes the SAME per-worker
                         # times the compiled step's finish mask was
@@ -560,5 +573,10 @@ class Trainer:
                 )
         if self._ckpt:
             self._ckpt.wait()
+        # final counters (process-global registry: alloc-cache tallies)
+        # land in the JSONL so obsreport sees them without a serve run
+        REGISTRY.emit(
+            self.telemetry, phase="train", rounds=float(self.cfg.steps)
+        )
         self.telemetry.close()
         return params, opt_state, history

@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.workload import CLASS_PRIORITY, DEADLINE_SLACK, Request
 
 
@@ -45,11 +46,13 @@ class BlockPool:
     recently-freed (cache-warm) blocks hot and makes reuse assertable in
     tests. Telemetry (``kv_bytes`` / ``blocks_in_use`` /
     ``blocks_freed`` events, DESIGN.md §8) makes pool pressure
-    observable alongside ``round_timing``.
+    observable alongside ``round_timing``; occupancy tallies live in a
+    ``MetricsRegistry`` (§14) so a run's final ``metrics_snapshot``
+    carries the pool view without replaying the event stream.
     """
 
     def __init__(self, num_blocks: int, block_len: int, *,
-                 bytes_per_block: int = 0, telemetry=None):
+                 bytes_per_block: int = 0, telemetry=None, metrics=None):
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be > 0, got {num_blocks}")
         if block_len <= 0:
@@ -58,10 +61,18 @@ class BlockPool:
         self.block_len = int(block_len)
         self.bytes_per_block = int(bytes_per_block)
         self.telemetry = telemetry
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._freed = self.metrics.counter("kv_blocks_freed")
+        self._in_use_gauge = self.metrics.gauge("kv_blocks_in_use")
+        self._util_gauge = self.metrics.gauge("kv_pool_utilization")
         # stack: first allocations get blocks 0, 1, ...; frees push back
         # on top so the most recently freed blocks are reused first
         self._free = list(range(num_blocks - 1, -1, -1))
-        self.blocks_freed = 0  # cumulative
+
+    @property
+    def blocks_freed(self) -> int:
+        """Cumulative blocks returned to the pool."""
+        return self._freed.value
 
     @property
     def free_blocks(self) -> int:
@@ -85,11 +96,13 @@ class BlockPool:
 
     def free(self, blocks, *, rid=None, now: float = 0.0) -> None:
         self._free.extend(blocks)
-        self.blocks_freed += len(blocks)
         if blocks:
+            self._freed.inc(len(blocks))
             self._emit(rid, now, freed=len(blocks))
 
     def _emit(self, rid, now: float, *, freed: int) -> None:
+        self._in_use_gauge.set(self.blocks_in_use)
+        self._util_gauge.set(self.blocks_in_use / self.num_blocks)
         if self.telemetry is None:
             return
         common = dict(request_id=rid, round=float(now))
@@ -178,6 +191,7 @@ class SlotScheduler:
         telemetry=None,
         pool: BlockPool | None = None,
         chunk: int | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         if slots <= 0:
             raise ValueError(f"slots must be > 0, got {slots}")
@@ -196,9 +210,25 @@ class SlotScheduler:
         self.telemetry = telemetry
         self.pool = pool
         self.chunk = chunk
+        # shed/admitted tallies and per-deadline-class latency
+        # percentiles live in the registry (§14); the serve loop shares
+        # one registry between scheduler and pool so a run snapshots as
+        # a unit
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._admitted = self.metrics.counter("requests_admitted")
+        self._shed_total = self.metrics.counter("requests_shed_total")
+        self._queue_gauge = self.metrics.gauge("queue_depth")
         self.finished: list[FinishedRequest] = []
-        self.shed = 0
-        self.admitted = 0
+
+    @property
+    def shed(self) -> int:
+        """Requests shed at enqueue time (all reasons)."""
+        return self._shed_total.value
+
+    @property
+    def admitted(self) -> int:
+        """Requests that entered a stream slot."""
+        return self._admitted.value
 
     # ------------------------------------------------------------- views
     @property
@@ -264,10 +294,12 @@ class SlotScheduler:
                 self._shed(req, now, "deadline_risk")
                 return False
         self.queue.append((req, now))
+        self._queue_gauge.set(len(self.queue))
         return True
 
     def _shed(self, req: Request, now: float, reason: str) -> None:
-        self.shed += 1
+        self._shed_total.inc()
+        self.metrics.counter("requests_shed", reason=reason).inc()
         self.finished.append(
             FinishedRequest(
                 request=req, outcome="shed", reason=reason,
@@ -321,7 +353,8 @@ class SlotScheduler:
                 request=req, admitted_at=now, generated=0,
                 prefilled=done_prefill, blocks=blocks,
             )
-            self.admitted += 1
+            self._admitted.inc()
+            self._queue_gauge.set(len(self.queue))
             placed.append((slot_idx, req))
             if self.telemetry is not None:
                 self.telemetry.event(
@@ -363,6 +396,10 @@ class SlotScheduler:
             )
             self.finished.append(fin)
             out.append((i, fin))
+            self.metrics.histogram(
+                "request_latency", deadline_class=req.deadline_class
+            ).observe(fin.latency)
+            self.metrics.counter("tokens_emitted").inc(s.generated)
             if self.pool is not None and s.blocks:
                 self.pool.free(s.blocks, rid=req.rid, now=now)
             self.slots[i] = SlotState()

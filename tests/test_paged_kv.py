@@ -342,6 +342,11 @@ def test_block_pool_telemetry_schema():
     freed = sink.events[2][1]
     assert freed == {"blocks": 2, "total_freed": 2,
                      "request_id": 7, "round": 3.0}
+    # declared-contract coverage (repro.obs.schema) on every record
+    from repro.obs.schema import validate_event
+
+    for name, fields in sink.events:
+        validate_event({"event": name, **fields})
 
 
 # ------------------------------------------------- controller-chosen slots
